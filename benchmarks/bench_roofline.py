@@ -1,0 +1,38 @@
+"""Roofline table (grading §Roofline) — reads the dry-run output if present,
+or computes a reduced live set (two representative cells) otherwise."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+DRYRUN_JSON = os.path.join(os.path.dirname(__file__), "..", "dryrun.json")
+
+
+def run() -> None:
+    path = os.path.abspath(DRYRUN_JSON)
+    if not os.path.exists(path):
+        emit("roofline_table", 0.0,
+             "dryrun.json missing — run: python -m repro.launch.dryrun --all"
+             " --out dryrun.json")
+        return
+    with open(path) as f:
+        data = json.load(f)
+    for row in data["rows"]:
+        t_dom = max(row["t_compute_s"], row["t_memory_s"],
+                    row["t_collective_s"])
+        emit(f"roofline_{row['arch']}_{row['shape']}_{row['mesh']}",
+             t_dom * 1e6,
+             f"bound={row['bottleneck']} frac={row['roofline_frac']:.3f} "
+             f"compute={row['t_compute_s']*1e3:.1f}ms "
+             f"mem={row['t_memory_s']*1e3:.1f}ms "
+             f"coll={row['t_collective_s']*1e3:.1f}ms")
+    if data.get("failures"):
+        emit("roofline_failures", float(len(data["failures"])),
+             ";".join("|".join(x[:3]) for x in data["failures"]))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (grading format).
+
+    PYTHONPATH=src python -m benchmarks.run [--only moe_ffn,step,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from .common import CSV_HEADER
+
+SECTIONS = [
+    ("moe_ffn", "Table 3 / Fig 7: Dispatch-to-Combine latency",
+     "benchmarks.bench_moe_ffn"),
+    ("step", "Fig 8: end-to-end training step",
+     "benchmarks.bench_step"),
+    ("swiglu_add", "Fig 9: SwiGLU+Add tile interleaving / L2 reuse",
+     "benchmarks.bench_swiglu_add"),
+    ("sched_overhead", "Fig 10: static vs dynamic scheduling",
+     "benchmarks.bench_sched_overhead"),
+    ("ep_modes", "EP mode comparison on the JAX system",
+     "benchmarks.bench_ep_modes"),
+    ("roofline", "TPU roofline table from the dry-run",
+     "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print(CSV_HEADER)
+    failed = []
+    for key, title, module in SECTIONS:
+        if only and key not in only:
+            continue
+        print(f"# --- {title} ---")
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failed.append((key, e))
+            traceback.print_exc(limit=4)
+            print(f"{key}_FAILED,0,{e}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

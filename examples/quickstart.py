@@ -1,0 +1,74 @@
+"""Quickstart: the three layers of HyperParallel-MoE-JAX in two minutes.
+
+1. Compile a MoE-FFN fragment into a static CTQ/VTQ taskflow (SSC).
+2. Validate the schedule numerically against the monolithic reference.
+3. Train a tiny MoE model a few steps with the standard substrate.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.odg import ScheduleConfig, build_moe_ffn_forward
+from repro.core.scheduler import compile_schedule
+from repro.core.simulator import simulate_baseline, simulate_unified
+from repro.core import executor as ex
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.models import model as M
+from repro.optim import adamw
+
+# --- 1. compile a schedule ------------------------------------------------
+cfg = ScheduleConfig(ep=4, e_loc=4, rows=64, d_model=512, d_ff=256,
+                     gmm_m_split=8)
+sched = compile_schedule(build_moe_ffn_forward(cfg), ratr=True)
+print(f"compiled taskflow: {sched.n_tasks} tile tasks, "
+      f"{len(sched.events)} events, "
+      f"CTQ[0]={len(sched.queue(0, 'CTQ'))} VTQ[0]={len(sched.queue(0, 'VTQ'))}")
+
+# --- 2. numerical validation + simulated speedup ---------------------------
+x_src, w1, w2 = ex.make_inputs(cfg)
+st = ex.ExecutorState(cfg)
+ex.load_forward_state(cfg, st, x_src, w1, w2)
+ex.execute(sched, st, rng=np.random.default_rng(0))
+ref = ex.reference_forward(cfg, x_src, w1, w2)
+np.testing.assert_allclose(
+    np.stack([st.get("y_ret", r) for r in range(cfg.ep)]), ref["y_ret"],
+    rtol=1e-5, atol=1e-5)
+print("executor == monolithic reference ✓")
+
+base = simulate_baseline(compile_schedule(build_moe_ffn_forward(
+    ScheduleConfig(ep=4, e_loc=4, rows=64, d_model=512, d_ff=256))))
+uni = simulate_unified(sched)
+print(f"simulated D2C: baseline {base.makespan_us:.0f}us → "
+      f"unified {uni.makespan_us:.0f}us "
+      f"({base.makespan_us / uni.makespan_us:.2f}x)")
+
+# --- 3. train a tiny MoE model ---------------------------------------------
+mcfg = get_smoke_config("granite-moe-3b-a800m")
+params = adamw.cast_params(M.init_params(mcfg, jax.random.PRNGKey(0)),
+                           mcfg.compute_dtype)
+opt_state = adamw.init_opt_state(params)
+oc = adamw.OptConfig(lr=3e-3, warmup_steps=5, total_steps=50,
+                     weight_decay=0.0)
+stream = SyntheticStream(DataConfig(vocab=mcfg.vocab, seq_len=32,
+                                    global_batch=8))
+
+
+@jax.jit
+def step(params, opt_state, batch):
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(mcfg, p, batch))(params)
+    p2, s2, m = adamw.apply_updates(params, grads, opt_state, oc)
+    return p2, s2, loss
+
+
+for i in range(20):
+    batch = {k: jnp.asarray(v)
+             for k, v in stream.global_batch_np(i).items()}
+    params, opt_state, loss = step(params, opt_state, batch)
+    if i % 5 == 0:
+        print(f"step {i:3d} loss {float(loss):.4f}")
+print("quickstart complete.")

@@ -1,0 +1,86 @@
+"""End-to-end MoE training driver: ~100M-param model, few hundred steps,
+with the full production substrate — data pipeline, mixed-precision AdamW,
+checkpointing, auto-resume, straggler watchdog.
+
+Run:  PYTHONPATH=src python examples/train_moe_e2e.py \
+          [--steps 300] [--ckpt-dir /tmp/moe_e2e]
+
+(Scaled to CPU: d_model 256, 8 experts, ~100M params via vocab+experts.
+On a real TPU mesh this same driver runs the full granite/dbrx configs —
+see repro/launch/dryrun.py for the mesh plumbing.)
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.ft.runner import FTConfig, train_loop
+from repro.models import model as M
+from repro.models.moe import MoEConfig
+from repro.optim import adamw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/moe_e2e_ckpt")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_smoke_config("granite-moe-3b-a800m"),
+        name="moe-100m", n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+        vocab=32000, vocab_pad=128,
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=512),
+        remat=False)
+    n = cfg.param_count()
+    print(f"model: {cfg.name}  params={n/1e6:.1f}M")
+
+    params = adamw.cast_params(M.init_params(cfg, jax.random.PRNGKey(0)),
+                               cfg.compute_dtype)
+    opt_state = adamw.init_opt_state(params)
+    oc = adamw.OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch))(params)
+        p2, s2, m = adamw.apply_updates(params, grads, opt_state, oc)
+        m["loss"] = loss
+        return p2, s2, m
+
+    class _Stream:
+        def __init__(self):
+            self.s = SyntheticStream(DataConfig(
+                vocab=cfg.vocab, seq_len=args.seq,
+                global_batch=args.batch))
+
+        def sharded_batch(self, step, mesh, sharding):
+            import jax.numpy as jnp
+            return {k: jnp.asarray(v)
+                    for k, v in self.s.global_batch_np(step).items()}
+
+    run = train_loop(
+        step_fn=step_fn, params=params, opt_state=opt_state,
+        stream=_Stream(), mesh=None, batch_sharding=None,
+        n_steps=args.steps,
+        ft=FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50))
+
+    if run.resumed_from is not None:
+        print(f"(auto-resumed from step {run.resumed_from})")
+    for m in run.metrics_log:
+        print(f"step {m['step']:4d} loss {m['loss']:.4f} "
+              f"gnorm {m['grad_norm']:.3f} {m['step_time_s']*1e3:.0f}ms")
+    if run.stragglers:
+        print(f"straggler events: {run.stragglers}")
+    first, last = run.metrics_log[0]["loss"], run.metrics_log[-1]["loss"]
+    print(f"loss {first:.3f} → {last:.3f} over {run.step} steps "
+          f"({'OK' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

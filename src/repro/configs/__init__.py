@@ -1,0 +1,44 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``ARCHS``."""
+
+from __future__ import annotations
+
+from importlib import import_module
+
+ARCHS = [
+    "granite-moe-3b-a800m",
+    "dbrx-132b",
+    "olmo-1b",
+    "llama3_2-3b",
+    "qwen2-1_5b",
+    "gemma-2b",
+    "recurrentgemma-2b",
+    "hubert-xlarge",
+    "mamba2-1_3b",
+    "internvl2-26b",
+]
+
+_ALIASES = {
+    "llama3.2-3b": "llama3_2-3b",
+    "qwen2-1.5b": "qwen2-1_5b",
+    "mamba2-1.3b": "mamba2-1_3b",
+}
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch)
+
+
+def get_config(arch: str, **overrides):
+    mod = import_module(
+        f"repro.configs.{canonical(arch).replace('-', '_')}")
+    cfg = mod.config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str):
+    mod = import_module(
+        f"repro.configs.{canonical(arch).replace('-', '_')}")
+    return mod.smoke_config()

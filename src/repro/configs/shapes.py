@@ -1,0 +1,94 @@
+"""Assigned input shapes × skip rules, and ShapeDtypeStruct input specs.
+
+Shapes (assignment):
+    train_4k     seq 4096,   global_batch 256   (train_step)
+    prefill_32k  seq 32768,  global_batch 32    (inference prefill)
+    decode_32k   seq 32768,  global_batch 128   (one-token decode, 32k cache)
+    long_500k    seq 524288, global_batch 1     (long-context decode)
+
+Skip rules (DESIGN.md §4):
+    * long_500k only for sub-quadratic archs (mamba2, recurrentgemma);
+    * decode shapes skipped for encoder-only archs (hubert);
+    * hubert prefill_32k = a 32k-frame encoder forward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SUBQUADRATIC = {"mamba2-1.3b", "recurrentgemma-2b"}
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> str | None:
+    if shape == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return "long_500k needs sub-quadratic attention (full-attention arch)"
+    if cfg.name in ENCODER_ONLY and SHAPES[shape].kind == "decode":
+        return "encoder-only arch has no decode step"
+    return None
+
+
+def cells(cfg: ModelConfig) -> list[str]:
+    return [s for s in SHAPES if skip_reason(cfg, s) is None]
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, batch_override=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns a dict matching what ``train_step`` / ``prefill_step`` /
+    ``decode_step`` expect. No device allocation.
+    """
+    sp = SHAPES[shape]
+    B = batch_override or sp.global_batch
+    S = sp.seq_len
+    i32 = jnp.int32
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if cfg.family == "audio":
+        feats = jax.ShapeDtypeStruct((B, S, cfg.feat_in), f)
+        if sp.kind == "train":
+            return {"features": feats,
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"features": feats}
+
+    if sp.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif sp.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token; the cache spec is built separately
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    if cfg.family == "vlm" and sp.kind != "decode":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), f)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: str, *, batch_override=None):
+    """ShapeDtypeStructs for the decode cache at this cell's seq_len."""
+    from repro.models.model import init_cache
+    sp = SHAPES[shape]
+    B = batch_override or sp.global_batch
+    return jax.eval_shape(lambda: init_cache(cfg, B, sp.seq_len))

@@ -1,0 +1,315 @@
+"""Numerical executor for compiled schedules.
+
+Replays an SSC taskflow *with real numbers* over an in-process model of the
+EP group: every buffer is a ``[rows, width]`` array per (tensor, rank), comm
+tasks perform one-sided writes into the destination rank's buffer, and tasks
+run in an arbitrary legal order chosen by the event counters — exactly the
+runtime protocol of §4.4, minus the hardware.
+
+This is the correctness backbone of the reproduction: for any schedule the
+executor's outputs must match the monolithic jnp reference (forward) and
+``jax.vjp`` of it (backward), bit-for-bit in fp32. Because execution order is
+event-driven (and can be randomized), passing tests prove the *event wiring*
+preserves the original MoE-FFN semantics under out-of-order completion.
+
+Note: Combine here is a pure one-sided copy back to the source rank — the
+top-k weighting/accumulation lives in ``models/moe.py`` outside the
+schedulable fragment, matching the paper's Dispatch-to-Combine boundary.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable, Optional
+
+import numpy as np
+
+from .odg import ScheduleConfig
+from .scheduler import Schedule, ScheduleError
+from .tasks import NO_EVENT, TaskDescriptor
+
+
+def _sigmoid(x: np.ndarray) -> np.ndarray:
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def _silu(x: np.ndarray) -> np.ndarray:
+    return x * _sigmoid(x)
+
+
+def swiglu_np(h: np.ndarray) -> np.ndarray:
+    f = h.shape[-1] // 2
+    return _silu(h[..., :f]) * h[..., f:]
+
+
+def swiglu_grad_np(dg: np.ndarray, h: np.ndarray) -> np.ndarray:
+    f = h.shape[-1] // 2
+    a, b = h[..., :f], h[..., f:]
+    s = _sigmoid(a)
+    silu_a = a * s
+    dsilu = s * (1.0 + a * (1.0 - s))
+    da = dg * b * dsilu
+    db = dg * silu_a
+    return np.concatenate([da, db], axis=-1)
+
+
+class ExecutorState:
+    """All (tensor, rank) buffers of one EP group, host-side."""
+
+    def __init__(self, cfg: ScheduleConfig):
+        self.cfg = cfg
+        self.buffers: dict[tuple[str, int], np.ndarray] = {}
+        self.weights: dict[tuple[str, int], np.ndarray] = {}
+        # (tensor, rank) -> total rows, precomputed from the schedule's write
+        # set so lazily-created buffers get their full extent up front.
+        self.rows_map: dict[tuple[str, int], int] = {}
+
+    def set_buffer(self, name: str, rank: int, arr: np.ndarray) -> None:
+        self.buffers[(name, rank)] = np.asarray(arr, dtype=np.float32)
+
+    def set_weight(self, name: str, rank: int, arr: np.ndarray) -> None:
+        """Weights are [e_loc, K, N] per rank."""
+        self.weights[(name, rank)] = np.asarray(arr, dtype=np.float32)
+
+    def ensure(self, name: str, rank: int, rows: int, width: int) -> np.ndarray:
+        key = (name, rank)
+        if key not in self.buffers:
+            rows = max(rows, self.rows_map.get(key, 0))
+            self.buffers[key] = np.zeros((rows, width), dtype=np.float32)
+        return self.buffers[key]
+
+    def get(self, name: str, rank: int) -> np.ndarray:
+        if (name, rank) in self.buffers:
+            return self.buffers[(name, rank)]
+        return self.weights[(name, rank)]
+
+
+# ---------------------------------------------------------------------------
+# Task handlers — bridge TDs to "operator bodies" (§4.4's handler layer).
+# ---------------------------------------------------------------------------
+
+def _h_put_mem_signal(td: TaskDescriptor, st: ExecutorState) -> None:
+    src = td.inputs[0]
+    data = st.get(src.tensor, src.rank)[src.lo:src.hi]
+    off = 0
+    for out in td.outputs:
+        buf = st.ensure(out.tensor, out.rank, _rows_hint(st, out), data.shape[1])
+        n = out.hi - out.lo
+        buf[out.lo:out.hi] = data[off:off + n]
+        off += n
+
+
+def _rows_hint(st: ExecutorState, rng) -> int:
+    # Destination buffers are created lazily; size from any existing peer.
+    for (name, r), arr in st.buffers.items():
+        if name == rng.tensor:
+            return arr.shape[0]
+    return rng.hi
+
+
+def _h_gmm(td: TaskDescriptor, st: ExecutorState) -> None:
+    a_rng, w_rng = td.inputs
+    a = st.get(a_rng.tensor, a_rng.rank)[a_rng.lo:a_rng.hi]
+    w_all = st.get(w_rng.tensor, w_rng.rank)
+    transpose = td.meta.get("which") in ("act_grad", "gate_grad")
+    if td.meta.get("fallback"):
+        # Unsplit task: block-diagonal GMM over all local experts.
+        rpe = st.cfg.rows_per_expert
+        outs = []
+        for e in range(st.cfg.e_loc):
+            w = w_all[e].T if transpose else w_all[e]
+            outs.append(a[e * rpe:(e + 1) * rpe] @ w)
+        out = np.concatenate(outs, axis=0)
+    else:
+        w = w_all[w_rng.lo]
+        if transpose:
+            w = w.T        # activation-gradient GMMs multiply by Wᵀ
+        out = a @ w
+    o = td.outputs[0]
+    buf = st.ensure(o.tensor, o.rank, a.shape[0], out.shape[1])
+    if buf.shape[0] < o.hi:
+        raise ScheduleError(f"output buffer too small for {td.op_name}")
+    buf[o.lo:o.hi] = out
+
+
+def _h_gmm_wgrad(td: TaskDescriptor, st: ExecutorState) -> None:
+    g_rng, act_rng = td.inputs   # [grad rows, saved activation rows]
+    grad = st.get(g_rng.tensor, g_rng.rank)[g_rng.lo:g_rng.hi]
+    act = st.get(act_rng.tensor, act_rng.rank)[act_rng.lo:act_rng.hi]
+    key = (td.outputs[0].tensor, td.outputs[0].rank)
+    if td.meta.get("fallback"):
+        rpe = st.cfg.rows_per_expert
+        for e in range(st.cfg.e_loc):
+            dW = act[e * rpe:(e + 1) * rpe].T @ grad[e * rpe:(e + 1) * rpe]
+            if key not in st.buffers:
+                st.buffers[key] = np.zeros(
+                    (st.cfg.e_loc, dW.shape[0], dW.shape[1]),
+                    dtype=np.float32)
+            st.buffers[key][e] += dW
+        return
+    dW = act.T @ grad
+    o = td.outputs[0]
+    if key not in st.buffers:
+        st.buffers[key] = np.zeros(
+            (st.cfg.e_loc, dW.shape[0], dW.shape[1]), dtype=np.float32)
+    st.buffers[key][o.lo] += dW      # m-chunks of one expert accumulate
+
+
+def _h_swiglu(td: TaskDescriptor, st: ExecutorState) -> None:
+    i = td.inputs[0]
+    h = st.get(i.tensor, i.rank)[i.lo:i.hi]
+    out = swiglu_np(h)
+    o = td.outputs[0]
+    buf = st.ensure(o.tensor, o.rank, st.get(i.tensor, i.rank).shape[0],
+                    out.shape[1])
+    buf[o.lo:o.hi] = out
+
+
+def _h_swiglu_grad(td: TaskDescriptor, st: ExecutorState) -> None:
+    dg_rng, h_rng = td.inputs
+    dg = st.get(dg_rng.tensor, dg_rng.rank)[dg_rng.lo:dg_rng.hi]
+    h = st.get(h_rng.tensor, h_rng.rank)[h_rng.lo:h_rng.hi]
+    out = swiglu_grad_np(dg, h)
+    o = td.outputs[0]
+    buf = st.ensure(o.tensor, o.rank, st.get(h_rng.tensor, h_rng.rank).shape[0],
+                    out.shape[1])
+    buf[o.lo:o.hi] = out
+
+
+HANDLERS: dict[str, Callable[[TaskDescriptor, ExecutorState], None]] = {
+    "put_mem_signal": _h_put_mem_signal,
+    "GMM": _h_gmm,
+    "GMMWGrad": _h_gmm_wgrad,
+    "SwiGLU": _h_swiglu,
+    "SwiGLUGrad": _h_swiglu_grad,
+}
+
+
+def execute(sched: Schedule, st: ExecutorState,
+            rng: Optional[np.random.Generator] = None,
+            record_order: Optional[list[int]] = None) -> None:
+    """Run the taskflow under event-counter gating.
+
+    Among all currently-runnable queue heads, picks uniformly at random when
+    ``rng`` is given (adversarial order), else round-robin — results must be
+    identical either way, which is what the tests assert.
+    """
+    for td in sched.tasks:
+        for w in td.outputs:
+            key = (w.tensor, w.rank)
+            st.rows_map[key] = max(st.rows_map.get(key, 0), w.hi)
+    cursors = {k: 0 for k in sched.queues}
+    counters: dict[int, int] = defaultdict(int)
+    done = 0
+    keys = sorted(sched.queues.keys())
+    while done < sched.n_tasks:
+        ready = []
+        for key in keys:
+            q = sched.queues[key]
+            c = cursors[key]
+            if c >= len(q):
+                continue
+            td = sched.tasks[q[c]]
+            if (td.dependent_event == NO_EVENT
+                    or counters[td.dependent_event] >= td.dependent_threshold):
+                ready.append(key)
+        if not ready:
+            raise ScheduleError(f"runtime deadlock at {done}/{sched.n_tasks}")
+        if rng is not None:
+            chosen = [ready[rng.integers(len(ready))]]
+        else:
+            chosen = ready
+        for key in chosen:
+            q = sched.queues[key]
+            td = sched.tasks[q[cursors[key]]]
+            HANDLERS[td.task_type](td, st)
+            if td.trigger_event != NO_EVENT:
+                counters[td.trigger_event] += 1
+            cursors[key] += 1
+            done += 1
+            if record_order is not None:
+                record_order.append(td.tid)
+
+
+# ---------------------------------------------------------------------------
+# Monolithic references (what a kernel-by-kernel framework computes).
+# ---------------------------------------------------------------------------
+
+def make_inputs(cfg: ScheduleConfig, seed: int = 0):
+    """Balanced-routing fragment inputs: x_src per rank, W1/W2 per rank."""
+    rng = np.random.default_rng(seed)
+    d, f = cfg.d_model, cfg.d_ff
+    x_src = rng.standard_normal(
+        (cfg.ep, cfg.ep * cfg.e_loc * cfg.rows, d)).astype(np.float32)
+    w1 = rng.standard_normal(
+        (cfg.ep, cfg.e_loc, d, 2 * f)).astype(np.float32) / np.sqrt(d)
+    w2 = rng.standard_normal(
+        (cfg.ep, cfg.e_loc, f, d)).astype(np.float32) / np.sqrt(f)
+    return x_src, w1, w2
+
+
+def reference_forward(cfg: ScheduleConfig, x_src, w1, w2):
+    """Monolithic Dispatch→GMM1→SwiGLU→GMM2→Combine, all ranks at once."""
+    ep, el, R = cfg.ep, cfg.e_loc, cfg.rows
+    d, f = cfg.d_model, cfg.d_ff
+    # Dispatch: x_src[s] grouped by (dst, e) → x_recv[r] grouped by (e, src).
+    blocks = x_src.reshape(ep, ep, el, R, d)          # [src, dst, e, R, d]
+    x_recv = np.transpose(blocks, (1, 2, 0, 3, 4))    # [dst, e, src, R, d]
+    x_flat = x_recv.reshape(ep, el, ep * R, d)
+    h = np.einsum("repd,redf->repf", x_flat.reshape(ep, el, ep * R, d), w1)
+    g = swiglu_np(h)
+    y = np.einsum("repf,refd->repd", g, w2)
+    # Combine: y[r] grouped by (e, src) → y_ret[s] grouped by (dst=r, e).
+    y_blocks = y.reshape(ep, el, ep, R, d)            # [dst, e, src, R, d]
+    y_ret = np.transpose(y_blocks, (2, 0, 1, 3, 4))   # [src, dst, e, R, d]
+    return {
+        "x_recv": x_flat.reshape(ep, el * ep * R, d),
+        "h": h.reshape(ep, el * ep * R, 2 * f),
+        "g": g.reshape(ep, el * ep * R, f),
+        "y": y.reshape(ep, el * ep * R, d),
+        "y_ret": y_ret.reshape(ep, ep * el * R, d),
+    }
+
+
+def reference_backward(cfg: ScheduleConfig, x_src, w1, w2, dy):
+    """Reference gradients via jax.vjp on the monolithic fragment."""
+    import jax
+    import jax.numpy as jnp
+
+    def frag(x_src, w1, w2):
+        ep, el, R = cfg.ep, cfg.e_loc, cfg.rows
+        d, f = cfg.d_model, cfg.d_ff
+        blocks = x_src.reshape(ep, ep, el, R, d)
+        x_recv = jnp.transpose(blocks, (1, 2, 0, 3, 4)).reshape(
+            ep, el, ep * R, d)
+        h = jnp.einsum("repd,redf->repf", x_recv, w1)
+        a, b = h[..., :f], h[..., f:]
+        g = jax.nn.silu(a) * b
+        y = jnp.einsum("repf,refd->repd", g, w2)
+        y_blocks = y.reshape(ep, el, ep, R, d)
+        return jnp.transpose(y_blocks, (2, 0, 1, 3, 4)).reshape(
+            ep, ep * el * R, d)
+
+    _, vjp = jax.vjp(frag, jnp.asarray(x_src), jnp.asarray(w1),
+                     jnp.asarray(w2))
+    dx, dw1, dw2 = vjp(jnp.asarray(dy))
+    return np.asarray(dx), np.asarray(dw1), np.asarray(dw2)
+
+
+def load_forward_state(cfg: ScheduleConfig, st: ExecutorState,
+                       x_src, w1, w2) -> None:
+    for r in range(cfg.ep):
+        st.set_buffer("x_src", r, x_src[r])
+        st.set_weight("W1", r, w1[r])
+        st.set_weight("W2", r, w2[r])
+
+
+def load_backward_state(cfg: ScheduleConfig, st: ExecutorState,
+                        fwd: dict, w1, w2, dy) -> None:
+    for r in range(cfg.ep):
+        st.set_buffer("dy_src", r, dy[r])
+        st.set_weight("W1", r, w1[r])
+        st.set_weight("W2", r, w2[r])
+        st.set_buffer("g_saved", r, fwd["g"][r])
+        st.set_buffer("h_saved", r, fwd["h"][r])
+        st.set_buffer("x_recv_saved", r, fwd["x_recv"][r])

@@ -1,0 +1,339 @@
+"""Operator Dependency Graph (ODG) — HyperParallel-MoE's scheduling IR (§4.2).
+
+The ODG describes the operator-level dataflow of a schedulable MoE-FFN
+fragment. Nodes are :class:`OperatorNode`s; edges are tensor dependencies
+expressed through shared :class:`TensorRef` objects. Each node carries a
+:class:`SplitSpec` describing its *legal* tiling strategy:
+
+* ``split_inputs`` — which input tensors must already carry a compatible
+  partition (``None`` marks a partitioning *origin*, e.g. Dispatch);
+* ``split_output_dims`` — along which dimension each output's partition
+  keeps propagating downstream (``-1`` = stop propagating);
+* ``task_num_fn`` — how many tile tasks to generate for a given shape /
+  parallel configuration.
+
+``build_moe_ffn_forward`` / ``build_moe_ffn_backward`` construct the exact
+graphs of Fig. 2(a)/(b) for a balanced-routing EP group.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+# Resource classes (paper: AIC = cube/matrix, AIV = vector/comm/data-movement).
+CUBE = "cube"
+VECTOR = "vector"
+
+# Queue names.
+CTQ = "CTQ"
+VTQ = "VTQ"
+
+RESOURCE_TO_QUEUE = {CUBE: CTQ, VECTOR: VTQ}
+
+
+@dataclasses.dataclass
+class TensorRef:
+    """A logical tensor in the ODG.
+
+    ``rows``/``row_bytes`` define the canonical *row layout* used for tile
+    range bookkeeping: every tile task reads/writes a contiguous row range of
+    some tensor. ``split_dim``/``split_num`` are the partition labels written
+    and consumed by split propagation (Algorithm 1); by convention the row
+    dimension is dim 0, so a row-partitioned tensor has ``split_dim == 0``.
+    """
+
+    name: str
+    rows: int
+    row_bytes: int
+    dtype: str = "bf16"
+    # Partition labels (mutated by split propagation).
+    split_dim: int = -1
+    split_num: int = 1
+    # True for tensors produced outside this fragment (weights, saved acts).
+    external: bool = False
+
+    @property
+    def nbytes(self) -> int:
+        return self.rows * self.row_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitSpec:
+    """Legal tiling strategy for one operator (§4.2)."""
+
+    # ((input_index, required_split_dim), ...) or None for partition origins.
+    split_inputs: Optional[tuple[tuple[int, int], ...]]
+    # Per output: dimension along which the partition propagates (-1 = stop).
+    split_output_dims: tuple[int, ...]
+    # Parallel-config → number of tile tasks.
+    task_num_fn: Callable[["ScheduleConfig"], int]
+    # Input indices excluded from split checking (e.g. Combine's offset/size
+    # metadata tensors — paper §4.2 example).
+    ignore_inputs: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class OperatorNode:
+    """One operator instance in the ODG (per EP rank for rank-local ops)."""
+
+    name: str
+    op_type: str                 # dispatch | gmm | swiglu | combine | ...
+    resource: str                # CUBE or VECTOR
+    rank: int                    # EP rank that *executes* this operator
+    inputs: list[TensorRef]
+    outputs: list[TensorRef]
+    split_spec: SplitSpec
+    meta: dict = dataclasses.field(default_factory=dict)
+    # Filled in by split propagation.
+    task_num: int = 1
+
+    @property
+    def queue(self) -> str:
+        return RESOURCE_TO_QUEUE[self.resource]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """Shape + parallel configuration C handed to split propagation.
+
+    Balanced-routing EP fragment: ``rows`` tokens flow from every source rank
+    to every (dst rank, local expert) pair — the controlled setting of the
+    paper's Table 3. ``d_model``/``d_ff`` in elements; dtype_bytes for bf16=2.
+    """
+
+    ep: int                      # EP group size
+    e_loc: int                   # local experts per rank
+    rows: int                    # tokens per (src, dst, expert) triple
+    d_model: int
+    d_ff: int
+    dtype_bytes: int = 2
+    # Extra row-wise splits per expert GMM tile (1 = one tile per expert,
+    # the paper's "tile covers a complete expert width" default).
+    gmm_m_split: int = 1
+
+    @property
+    def rows_per_expert(self) -> int:
+        """Rows each local expert processes (from all ep source ranks)."""
+        return self.ep * self.rows
+
+    @property
+    def recv_rows(self) -> int:
+        """Total rows in a rank's dispatch-receive buffer."""
+        return self.e_loc * self.rows_per_expert
+
+
+class ODG:
+    """A directed acyclic operator graph over one EP group."""
+
+    def __init__(self, cfg: ScheduleConfig, direction: str):
+        self.cfg = cfg
+        self.direction = direction          # "forward" | "backward"
+        self.tensors: dict[str, TensorRef] = {}
+        self.ops: list[OperatorNode] = []
+
+    # -- construction -----------------------------------------------------
+    def tensor(self, name: str, rows: int, row_bytes: int, **kw) -> TensorRef:
+        if name in self.tensors:
+            return self.tensors[name]
+        t = TensorRef(name=name, rows=rows, row_bytes=row_bytes, **kw)
+        self.tensors[name] = t
+        return t
+
+    def add_op(self, op: OperatorNode) -> OperatorNode:
+        self.ops.append(op)
+        return op
+
+    # -- queries -----------------------------------------------------------
+    def topological(self) -> list[OperatorNode]:
+        """Ops in topological order.
+
+        Construction order is already topological for the builders below, but
+        we verify: every non-external input must have been produced by an
+        earlier op (or be external).
+        """
+        produced: set[str] = set()
+        for op in self.ops:
+            for t in op.inputs:
+                if not t.external and t.name not in produced:
+                    raise ValueError(
+                        f"ODG not topologically ordered: {op.name} reads "
+                        f"{t.name} before it is produced")
+            for t in op.outputs:
+                produced.add(t.name)
+        return list(self.ops)
+
+    def validate_acyclic(self) -> None:
+        self.topological()
+
+
+# ---------------------------------------------------------------------------
+# SplitSpecs for the MoE-FFN operators (paper §4.2).
+# ---------------------------------------------------------------------------
+
+def _dispatch_tasks(c: ScheduleConfig) -> int:
+    # One put_mem_signal task per (destination rank, local expert) region.
+    return c.ep * c.e_loc
+
+
+def _gmm_tasks(c: ScheduleConfig) -> int:
+    # Task-level parallelism only along expert blocks (× optional row split);
+    # the K reduction dimension stays intact (§4.2).
+    return c.e_loc * c.gmm_m_split
+
+
+def _vector_tasks(c: ScheduleConfig) -> int:
+    # AIV-side elementwise ops align with GMM row partitions.
+    return c.e_loc * c.gmm_m_split
+
+
+def _combine_tasks(c: ScheduleConfig) -> int:
+    # One put_mem_signal task per (source rank, local expert) region.
+    return c.ep * c.e_loc
+
+
+DISPATCH_SPEC = SplitSpec(split_inputs=None, split_output_dims=(0,),
+                          task_num_fn=_dispatch_tasks)
+GMM_SPEC = SplitSpec(split_inputs=((0, 0),), split_output_dims=(0,),
+                     task_num_fn=_gmm_tasks)
+SWIGLU_SPEC = SplitSpec(split_inputs=((0, 0),), split_output_dims=(0,),
+                        task_num_fn=_vector_tasks)
+# Combine inherits row partitioning from its *data* input (input 0) and
+# ignores routing-metadata inputs during split checking (§4.2).
+COMBINE_SPEC = SplitSpec(split_inputs=((0, 0),), split_output_dims=(0,),
+                         task_num_fn=_combine_tasks, ignore_inputs=(1,))
+# Weight-gradient GMMs terminate propagation (outputs are weight blocks).
+GMM_WGRAD_SPEC = SplitSpec(split_inputs=((0, 0),), split_output_dims=(-1,),
+                           task_num_fn=_gmm_tasks)
+
+
+# ---------------------------------------------------------------------------
+# Graph builders — Fig. 2(a) forward and Fig. 2(b) backward.
+# ---------------------------------------------------------------------------
+
+def build_moe_ffn_forward(cfg: ScheduleConfig) -> ODG:
+    """Dispatch → GMM1 → SwiGLU → GMM2 → Combine, per EP rank."""
+    g = ODG(cfg, "forward")
+    db = cfg.dtype_bytes
+    d, f = cfg.d_model, cfg.d_ff
+
+    for r in range(cfg.ep):
+        # Source-side routed tokens, grouped by (dst rank, expert).
+        x_src = g.tensor(f"x_src@{r}", cfg.ep * cfg.e_loc * cfg.rows, d * db,
+                         external=True)
+        # Receive buffer, grouped by (expert, src rank) — expert-major so each
+        # expert's rows are contiguous for the GMM.
+        x_recv = g.tensor(f"x_recv@{r}", cfg.recv_rows, d * db)
+        g.add_op(OperatorNode(
+            name=f"Dispatch@{r}", op_type="dispatch", resource=VECTOR, rank=r,
+            inputs=[x_src], outputs=[x_recv], split_spec=DISPATCH_SPEC))
+
+    for r in range(cfg.ep):
+        x_recv = g.tensors[f"x_recv@{r}"]
+        w1 = g.tensor(f"W1@{r}", cfg.e_loc, d * 2 * f * db, external=True)
+        h = g.tensor(f"h@{r}", cfg.recv_rows, 2 * f * db)
+        g.add_op(OperatorNode(
+            name=f"GMM1@{r}", op_type="gmm", resource=CUBE, rank=r,
+            inputs=[x_recv, w1], outputs=[h], split_spec=GMM_SPEC,
+            meta={"which": "gmm1"}))
+
+        act = g.tensor(f"g@{r}", cfg.recv_rows, f * db)
+        g.add_op(OperatorNode(
+            name=f"SwiGLU@{r}", op_type="swiglu", resource=VECTOR, rank=r,
+            inputs=[h], outputs=[act], split_spec=SWIGLU_SPEC))
+
+        w2 = g.tensor(f"W2@{r}", cfg.e_loc, f * d * db, external=True)
+        y = g.tensor(f"y@{r}", cfg.recv_rows, d * db)
+        g.add_op(OperatorNode(
+            name=f"GMM2@{r}", op_type="gmm", resource=CUBE, rank=r,
+            inputs=[act, w2], outputs=[y], split_spec=GMM_SPEC,
+            meta={"which": "gmm2"}))
+
+    for r in range(cfg.ep):
+        y = g.tensors[f"y@{r}"]
+        meta_t = g.tensor(f"route_meta@{r}", cfg.ep * cfg.e_loc, 8,
+                          external=True)
+        y_ret = g.tensor(f"y_ret@{r}", cfg.ep * cfg.e_loc * cfg.rows, d * db)
+        g.add_op(OperatorNode(
+            name=f"Combine@{r}", op_type="combine", resource=VECTOR, rank=r,
+            inputs=[y, meta_t], outputs=[y_ret], split_spec=COMBINE_SPEC))
+
+    g.validate_acyclic()
+    return g
+
+
+def build_moe_ffn_backward(cfg: ScheduleConfig) -> ODG:
+    """The 7-node backward graph of Fig. 2(b).
+
+    DispatchB → {GMM_act_grad, GMM_w2_grad} → SwiGLU_grad →
+    {GMM_gate_grad, GMM_w1_grad} → CombineB.
+    ``GMM_act_grad``/``GMM_w2_grad`` independently consume the dispatched
+    upstream gradient; ``GMM_gate_grad``/``GMM_w1_grad`` independently consume
+    the SwiGLU gradient — the freedom exploited by cache-guided interleaving.
+    """
+    g = ODG(cfg, "backward")
+    db = cfg.dtype_bytes
+    d, f = cfg.d_model, cfg.d_ff
+
+    for r in range(cfg.ep):
+        dy_src = g.tensor(f"dy_src@{r}", cfg.ep * cfg.e_loc * cfg.rows,
+                          d * db, external=True)
+        dy_recv = g.tensor(f"dy_recv@{r}", cfg.recv_rows, d * db)
+        g.add_op(OperatorNode(
+            name=f"DispatchB@{r}", op_type="dispatch", resource=VECTOR,
+            rank=r, inputs=[dy_src], outputs=[dy_recv],
+            split_spec=DISPATCH_SPEC))
+
+    for r in range(cfg.ep):
+        dy_recv = g.tensors[f"dy_recv@{r}"]
+        w2 = g.tensor(f"W2@{r}", cfg.e_loc, f * d * db, external=True)
+        g_saved = g.tensor(f"g_saved@{r}", cfg.recv_rows, f * db,
+                           external=True)
+        dg = g.tensor(f"dg@{r}", cfg.recv_rows, f * db)
+        g.add_op(OperatorNode(
+            name=f"GMM_act_grad@{r}", op_type="gmm", resource=CUBE, rank=r,
+            inputs=[dy_recv, w2], outputs=[dg], split_spec=GMM_SPEC,
+            meta={"which": "act_grad", "branch": "dy"}))
+        dW2 = g.tensor(f"dW2@{r}", cfg.e_loc, f * d * 4)  # fp32 wgrad
+        g.add_op(OperatorNode(
+            name=f"GMM_w2_grad@{r}", op_type="gmm_wgrad", resource=CUBE,
+            rank=r, inputs=[dy_recv, g_saved], outputs=[dW2],
+            split_spec=GMM_WGRAD_SPEC,
+            meta={"which": "w2_grad", "branch": "dy"}))
+
+        h_saved = g.tensor(f"h_saved@{r}", cfg.recv_rows, 2 * f * db,
+                           external=True)
+        dh = g.tensor(f"dh@{r}", cfg.recv_rows, 2 * f * db)
+        g.add_op(OperatorNode(
+            name=f"SwiGLU_grad@{r}", op_type="swiglu_grad", resource=VECTOR,
+            rank=r, inputs=[dg, h_saved], outputs=[dh],
+            split_spec=SWIGLU_SPEC))
+
+        w1 = g.tensor(f"W1@{r}", cfg.e_loc, d * 2 * f * db, external=True)
+        dx_disp = g.tensor(f"dx_disp@{r}", cfg.recv_rows, d * db)
+        g.add_op(OperatorNode(
+            name=f"GMM_gate_grad@{r}", op_type="gmm", resource=CUBE, rank=r,
+            inputs=[dh, w1], outputs=[dx_disp], split_spec=GMM_SPEC,
+            meta={"which": "gate_grad", "branch": "dh"}))
+        x_saved = g.tensor(f"x_recv_saved@{r}", cfg.recv_rows, d * db,
+                           external=True)
+        dW1 = g.tensor(f"dW1@{r}", cfg.e_loc, d * 2 * f * 4)
+        g.add_op(OperatorNode(
+            name=f"GMM_w1_grad@{r}", op_type="gmm_wgrad", resource=CUBE,
+            rank=r, inputs=[dh, x_saved], outputs=[dW1],
+            split_spec=GMM_WGRAD_SPEC,
+            meta={"which": "w1_grad", "branch": "dh"}))
+
+    for r in range(cfg.ep):
+        dx_disp = g.tensors[f"dx_disp@{r}"]
+        meta_t = g.tensor(f"route_meta@{r}", cfg.ep * cfg.e_loc, 8,
+                          external=True)
+        dx_ret = g.tensor(f"dx_ret@{r}", cfg.ep * cfg.e_loc * cfg.rows,
+                          d * db)
+        g.add_op(OperatorNode(
+            name=f"CombineB@{r}", op_type="combine", resource=VECTOR, rank=r,
+            inputs=[dx_disp, meta_t], outputs=[dx_ret],
+            split_spec=COMBINE_SPEC))
+
+    g.validate_acyclic()
+    return g

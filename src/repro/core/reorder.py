@@ -1,0 +1,153 @@
+"""Execution-order optimizations over legal topological orders (§4.5).
+
+Both passes permute *mutually independent* tasks only — ODG edges, tile
+ranges, and event semantics are untouched, and ``validate_schedule`` re-proves
+legality after reordering.
+
+* **RATR (rank-aware task reordering)** — rotate each source rank's
+  communication-task order so rank *r* starts sending to destination
+  ``(r+1) mod ep`` and walks the ring. Destroys the destination-rank hotspot
+  of the naive order (every rank sending to rank 0 first) and balances link
+  usage over time (Fig. 6).
+
+* **Cache-guided GMM interleaving** — in the backward graph the two GMM
+  branches hanging off a shared input (act_grad/w2_grad consume dispatched
+  dY; gate_grad/w1_grad consume dSwiGLU) are topologically independent.
+  Interleaving their tiles by expert shortens the reuse distance of the
+  shared activations in L2/VMEM instead of streaming one branch end-to-end.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+from .odg import ScheduleConfig, CTQ, VTQ
+
+
+def apply_reorderings(sched, cfg: ScheduleConfig, *, ratr: bool,
+                      gmm_interleave: bool,
+                      chain_interleave: bool = False) -> None:
+    if ratr:
+        _apply_ratr(sched, cfg)
+    if gmm_interleave and sched.direction == "backward":
+        _apply_gmm_interleave(sched, cfg)
+    if chain_interleave:
+        _apply_chain_interleave(sched)
+
+
+def _apply_chain_interleave(sched, lag: int = 50) -> None:
+    """Place consumer tiles a small *lag* behind their aligned producers
+    (§6.1).
+
+    For 1:1-aligned elementwise chains the VTQ order becomes
+    [p0 … p_{lag-1}, c0, p_lag, c1, …]: close enough that the producer's
+    tile is still L2-resident when the consumer reads it, but far enough
+    that in-order-fetching workers never block on a not-yet-ready consumer
+    (lag ≈ worker-pool width). Op-major order instead streams the whole
+    intermediate through the cache before any consumer runs."""
+    for key, q in list(sched.queues.items()):
+        by_op: dict[str, list[int]] = {}
+        order: list[str] = []
+        for tid in q:
+            op = sched.tasks[tid].op_name
+            if op not in by_op:
+                order.append(op)
+            by_op.setdefault(op, []).append(tid)
+        if len(order) < 2:
+            continue
+        counts = {len(v) for v in by_op.values()}
+        if len(counts) != 1:
+            continue            # not 1:1 aligned — leave as-is
+        n = counts.pop()
+        streams = [by_op[op] for op in order]
+        k = len(streams)
+        new_q: list[int] = []
+        emitted = [0] * k
+        while len(new_q) < n * k:
+            # Emit from the deepest stream whose predecessor is ≥ lag ahead
+            # (or finished); otherwise advance the head stream.
+            for si in range(k - 1, -1, -1):
+                if emitted[si] >= n:
+                    continue
+                if si == 0 or emitted[si - 1] >= min(n, emitted[si] + lag):
+                    new_q.append(streams[si][emitted[si]])
+                    emitted[si] += 1
+                    break
+        sched.queues[key] = new_q
+
+
+def ratr_order(rank: int, ep: int) -> list[int]:
+    """Destination visit order for a source rank under RATR."""
+    return [(rank + 1 + i) % ep for i in range(ep)]
+
+
+def _apply_ratr(sched, cfg: ScheduleConfig) -> None:
+    for (rank, qtype), q in sched.queues.items():
+        if qtype != VTQ:
+            continue
+        ring_pos = {d: i for i, d in enumerate(ratr_order(rank, cfg.ep))}
+        # Reorder each comm operator's contiguous task block independently so
+        # relative order against non-comm VTQ tasks is preserved.
+        new_q: list[int] = []
+        block: list[int] = []
+        block_op = None
+
+        def flush():
+            nonlocal block, block_op
+            if block:
+                block.sort(key=lambda tid: (
+                    ring_pos[sched.tasks[tid].dst_rank],
+                    sched.tasks[tid].meta.get("expert", 0)))
+                new_q.extend(block)
+                block, block_op = [], None
+
+        for tid in q:
+            td = sched.tasks[tid]
+            is_comm = (td.task_type == "put_mem_signal"
+                       and td.dst_rank >= 0)
+            if is_comm and (block_op in (None, td.op_name)):
+                block.append(tid)
+                block_op = td.op_name
+            else:
+                flush()
+                if is_comm:
+                    block.append(tid)
+                    block_op = td.op_name
+                else:
+                    new_q.append(tid)
+        flush()
+        sched.queues[(rank, qtype)] = new_q
+
+
+def _apply_gmm_interleave(sched, cfg: ScheduleConfig) -> None:
+    """Interleave independent backward GMM branch pairs by expert."""
+    for (rank, qtype), q in sched.queues.items():
+        if qtype != CTQ:
+            continue
+        # Group consecutive CTQ ops by their shared-input branch tag.
+        by_branch: dict[str, list[int]] = defaultdict(list)
+        order: list[str] = []
+        for tid in q:
+            br = sched.tasks[tid].meta.get("branch", f"_solo{tid}")
+            if br not in by_branch:
+                order.append(br)
+            by_branch[br].append(tid)
+
+        new_q: list[int] = []
+        for br in order:
+            tids = by_branch[br]
+            ops = []
+            for tid in tids:
+                op = sched.tasks[tid].op_name
+                if op not in ops:
+                    ops.append(op)
+            if br.startswith("_solo") or len(ops) < 2:
+                new_q.extend(tids)
+                continue
+            # Interleave: same (expert, m) tiles of the branch's ops adjacent.
+            keyed = sorted(tids, key=lambda tid: (
+                sched.tasks[tid].meta.get("expert", 0),
+                sched.tasks[tid].meta.get("m", 0),
+                ops.index(sched.tasks[tid].op_name)))
+            new_q.extend(keyed)
+        sched.queues[(rank, qtype)] = new_q

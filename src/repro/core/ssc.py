@@ -1,0 +1,117 @@
+"""Static Schedule Configuration (SSC) — the compilation/runtime boundary.
+
+SSC is the serialized execution plan a rank's unified runtime consumes:
+CTQ/VTQ task sequences, TD metadata, dependency events, and thresholds
+(§3, §5.1). For a fixed shape bucket, EP size, and rank the SSC is compiled
+once and reused across training steps; each step supplies only fresh tensor
+pointers and zeroed event-counter state.
+
+We serialize with msgpack (binary, runtime) and expose a JSON debug dump.
+An in-process :class:`SSCCache` keyed by shape bucket mirrors the paper's
+"reuse SSC for stable shapes or shape buckets" behaviour (Table 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import msgpack
+
+from .odg import ScheduleConfig
+from .scheduler import Event, Schedule
+from .tasks import Range, TaskDescriptor
+
+
+def _td_to_dict(td: TaskDescriptor) -> dict:
+    d = dataclasses.asdict(td)
+    d["inputs"] = [dataclasses.asdict(r) for r in td.inputs]
+    d["outputs"] = [dataclasses.asdict(r) for r in td.outputs]
+    return d
+
+
+def _td_from_dict(d: dict) -> TaskDescriptor:
+    d = dict(d)
+    d["inputs"] = [Range(**r) for r in d["inputs"]]
+    d["outputs"] = [Range(**r) for r in d["outputs"]]
+    return TaskDescriptor(**d)
+
+
+def schedule_to_ssc(s: Schedule) -> bytes:
+    """Serialize a full (all-rank) schedule."""
+    payload = {
+        "version": 1,
+        "direction": s.direction,
+        "ep": s.ep,
+        "opts": s.opts,
+        "tasks": [_td_to_dict(td) for td in s.tasks],
+        "events": {str(e.eid): {"threshold": e.threshold,
+                                "home_rank": e.home_rank,
+                                "producers": list(e.producers)}
+                   for e in s.events.values()},
+        "queues": [{"rank": r, "qtype": q, "tids": tids}
+                   for (r, q), tids in sorted(s.queues.items())],
+    }
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+def ssc_to_schedule(blob: bytes) -> Schedule:
+    p = msgpack.unpackb(blob, raw=False)
+    tasks = [_td_from_dict(d) for d in p["tasks"]]
+    events = {int(k): Event(eid=int(k), threshold=v["threshold"],
+                            home_rank=v["home_rank"],
+                            producers=tuple(v["producers"]))
+              for k, v in p["events"].items()}
+    queues = {(e["rank"], e["qtype"]): list(e["tids"]) for e in p["queues"]}
+    return Schedule(direction=p["direction"], ep=p["ep"], tasks=tasks,
+                    events=events, queues=queues, opts=p.get("opts", {}))
+
+
+def rank_view(s: Schedule, rank: int) -> dict:
+    """The per-rank slice a device runtime would receive (debug/JSON)."""
+    tids = set(s.queue(rank, "CTQ")) | set(s.queue(rank, "VTQ"))
+    return {
+        "rank": rank,
+        "ctq": [_td_to_dict(s.tasks[t]) for t in s.queue(rank, "CTQ")],
+        "vtq": [_td_to_dict(s.tasks[t]) for t in s.queue(rank, "VTQ")],
+        "events": {e.eid: e.threshold for e in s.events.values()
+                   if e.home_rank == rank
+                   or any(p in tids for p in e.producers)},
+    }
+
+
+def dump_json(s: Schedule, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([rank_view(s, r) for r in range(s.ep)], f, indent=1)
+
+
+class SSCCache:
+    """Shape-bucket keyed cache of compiled SSCs (paper §5.1)."""
+
+    def __init__(self):
+        self._cache: dict[tuple, bytes] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(cfg: ScheduleConfig, direction: str, **opts) -> tuple:
+        return (cfg.ep, cfg.e_loc, cfg.rows, cfg.d_model, cfg.d_ff,
+                cfg.gmm_m_split, direction, tuple(sorted(opts.items())))
+
+    def get_or_compile(self, cfg: ScheduleConfig, direction: str,
+                       **opts) -> Schedule:
+        from .odg import build_moe_ffn_backward, build_moe_ffn_forward
+        from .scheduler import compile_schedule
+        k = self.key(cfg, direction, **opts)
+        blob = self._cache.get(k)
+        if blob is None:
+            self.misses += 1
+            builder = (build_moe_ffn_forward if direction == "forward"
+                       else build_moe_ffn_backward)
+            sched = compile_schedule(builder(cfg), **opts)
+            blob = schedule_to_ssc(sched)
+            self._cache[k] = blob
+        else:
+            self.hits += 1
+        return ssc_to_schedule(blob)

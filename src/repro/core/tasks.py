@@ -1,0 +1,326 @@
+"""Tile Task Descriptors (TDs) and per-operator FillConfigs (§4.2, Table 1).
+
+A TD is the basic runtime-consumed unit. ``FillConfig`` functions transform
+an operator's legal tile tasks (count decided by split propagation) into
+runtime-consumable TDs: tile row ranges, queue type, comm endpoints, and the
+read/write sets used by the static scheduler for dependency derivation.
+
+Read/write sets use the canonical *(tensor, rank, row range)* addressing of
+``odg.TensorRef`` — an interval-overlap between a writer and a reader is a
+true data dependency. Cross-rank communication tasks are sender-side tasks
+(the AIV worker that issues ``put_mem_signal``) whose *writes* land on the
+destination rank, mirroring one-sided remote-write semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .odg import ODG, OperatorNode, ScheduleConfig, CTQ, VTQ
+
+# Sentinel event id meaning "no event" (paper uses uint32 fields).
+NO_EVENT = 0xFFFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class Range:
+    """A contiguous row range of (tensor, rank)."""
+
+    tensor: str
+    rank: int
+    lo: int
+    hi: int
+
+    @property
+    def rows(self) -> int:
+        return self.hi - self.lo
+
+    def overlaps(self, other: "Range") -> bool:
+        return (self.tensor == other.tensor and self.rank == other.rank
+                and self.lo < other.hi and other.lo < self.hi)
+
+
+@dataclasses.dataclass
+class TaskDescriptor:
+    """Table 1 of the paper, plus the scheduler-facing read/write sets."""
+
+    # --- Table 1 fields ---------------------------------------------------
+    task_type: str               # GMM | SwiGLU | SwiGLUGrad | put_mem_signal…
+    queue_type: str              # CTQ or VTQ
+    dependent_event: int = NO_EVENT
+    trigger_event: int = NO_EVENT
+    inputs: list[Range] = dataclasses.field(default_factory=list)
+    outputs: list[Range] = dataclasses.field(default_factory=list)
+    task_index: int = 0
+    task_split_num: int = 1
+    task_split_value: int = 0    # rows per tile, used to derive tile ranges
+    tiling_data_position: int = 0
+    # --- framework metadata ------------------------------------------------
+    op_name: str = ""
+    op_type: str = ""
+    rank: int = 0                # executing rank (sender side for comm)
+    meta: dict = dataclasses.field(default_factory=dict)
+    # Threshold the dependent event counter must reach (paper §4.3).
+    dependent_threshold: int = 0
+    # Globally unique id assigned by the scheduler.
+    tid: int = -1
+
+    # Cost model hooks (filled by FillConfig; consumed by the simulator).
+    flops: float = 0.0
+    read_bytes: float = 0.0
+    write_bytes: float = 0.0
+    comm_bytes: float = 0.0
+    src_rank: int = -1
+    dst_rank: int = -1
+
+
+# ---------------------------------------------------------------------------
+# FillConfig registry
+# ---------------------------------------------------------------------------
+
+_FILL_REGISTRY: dict[str, "callable"] = {}
+
+
+def fill_config(op_type: str):
+    def deco(fn):
+        _FILL_REGISTRY[op_type] = fn
+        return fn
+    return deco
+
+
+def fill_tasks(g: ODG, op: OperatorNode) -> list[TaskDescriptor]:
+    fn = _FILL_REGISTRY.get(op.op_type)
+    if fn is None:
+        raise KeyError(f"no FillConfig registered for op_type={op.op_type}")
+    tds = fn(g.cfg, op)
+    for i, td in enumerate(tds):
+        td.op_name = op.name
+        td.op_type = op.op_type
+        td.rank = op.rank
+        td.task_index = i
+        td.task_split_num = len(tds)
+    return tds
+
+
+def _db(cfg: ScheduleConfig) -> int:
+    return cfg.dtype_bytes
+
+
+# -- Dispatch / Combine: put_mem_signal communication tasks ------------------
+
+@fill_config("dispatch")
+def _fill_dispatch(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]:
+    """One put_mem_signal per (dst rank, local expert) region.
+
+    Source layout groups rows by (dst, expert); destination layout groups by
+    (expert, src) so that each expert's rows are contiguous for the GMM.
+    """
+    r = op.rank
+    src_t, dst_t = op.inputs[0], op.outputs[0]
+    R = cfg.rows
+    row_b = src_t.row_bytes
+    tds = []
+    base_src = src_t.name.split("@")[0]
+    base_dst = dst_t.name.split("@")[0]
+    if op.task_num == 1:
+        # Fallback: a single unsplit AllToAll-like task. It writes the
+        # (e, src=r) stripes of every destination buffer; dependency ranges
+        # stay exact so downstream consumers still see true readiness.
+        outs = []
+        for d in range(cfg.ep):
+            for e in range(cfg.e_loc):
+                d_lo = (e * cfg.ep + r) * R
+                outs.append(Range(base_dst, d, d_lo, d_lo + R))
+        td = TaskDescriptor(
+            task_type="put_mem_signal", queue_type=VTQ,
+            inputs=[Range(base_src, r, 0, src_t.rows)],
+            outputs=outs,
+            task_split_value=src_t.rows,
+            comm_bytes=src_t.rows * row_b, src_rank=r, dst_rank=-1,
+            read_bytes=src_t.rows * row_b, write_bytes=src_t.rows * row_b,
+            meta={"fallback": True, "comm_kind": "dispatch"})
+        return [td]
+    for d in range(cfg.ep):
+        for e in range(cfg.e_loc):
+            s_lo = (d * cfg.e_loc + e) * R
+            d_lo = (e * cfg.ep + r) * R
+            tds.append(TaskDescriptor(
+                task_type="put_mem_signal", queue_type=VTQ,
+                inputs=[Range(base_src, r, s_lo, s_lo + R)],
+                outputs=[Range(base_dst, d, d_lo, d_lo + R)],
+                task_split_value=R,
+                comm_bytes=R * row_b, src_rank=r, dst_rank=d,
+                read_bytes=R * row_b, write_bytes=R * row_b,
+                meta={"expert": e, "dst": d, "comm_kind": "dispatch"}))
+    return tds
+
+
+@fill_config("combine")
+def _fill_combine(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]:
+    """One put_mem_signal per (source rank, local expert) return region."""
+    r = op.rank
+    src_t, ret_t = op.inputs[0], op.outputs[0]
+    R = cfg.rows
+    row_b = src_t.row_bytes
+    base_src = src_t.name.split("@")[0]
+    base_ret = ret_t.name.split("@")[0]
+    if op.task_num == 1:
+        # Fallback: outputs ordered to match the (e, src)-major input layout
+        # so a sequential block copy is numerically correct.
+        outs = []
+        for e in range(cfg.e_loc):
+            for s in range(cfg.ep):
+                ret_lo = (r * cfg.e_loc + e) * R
+                outs.append(Range(base_ret, s, ret_lo, ret_lo + R))
+        return [TaskDescriptor(
+            task_type="put_mem_signal", queue_type=VTQ,
+            inputs=[Range(base_src, r, 0, src_t.rows)],
+            outputs=outs,
+            task_split_value=src_t.rows,
+            comm_bytes=src_t.rows * row_b, src_rank=r, dst_rank=-1,
+            read_bytes=src_t.rows * row_b, write_bytes=src_t.rows * row_b,
+            meta={"fallback": True, "comm_kind": "combine"})]
+    tds = []
+    for s in range(cfg.ep):
+        for e in range(cfg.e_loc):
+            y_lo = (e * cfg.ep + s) * R          # expert-major on this rank
+            ret_lo = (r * cfg.e_loc + e) * R     # (dst=r, expert) on source s
+            tds.append(TaskDescriptor(
+                task_type="put_mem_signal", queue_type=VTQ,
+                inputs=[Range(base_src, r, y_lo, y_lo + R)],
+                outputs=[Range(base_ret, s, ret_lo, ret_lo + R)],
+                task_split_value=R,
+                comm_bytes=R * row_b, src_rank=r, dst_rank=s,
+                read_bytes=R * row_b, write_bytes=R * row_b,
+                meta={"expert": e, "dst": s, "comm_kind": "combine"}))
+    return tds
+
+
+# -- GMM: expert-block tiles (full-K reduction) ------------------------------
+
+def _gmm_tiles(cfg: ScheduleConfig, op: OperatorNode,
+               task_type: str) -> list[TaskDescriptor]:
+    r = op.rank
+    in_t, w_t = op.inputs[0], op.inputs[1]
+    out_t = op.outputs[0]
+    base_in = in_t.name.split("@")[0]
+    base_w = w_t.name.split("@")[0]
+    base_out = out_t.name.split("@")[0]
+    in_row_b, out_row_b = in_t.row_bytes, out_t.row_bytes
+    rpe = cfg.rows_per_expert
+
+    if op.task_num == 1:
+        k = in_row_b // _db(cfg)
+        n = out_row_b // _db(cfg)
+        return [TaskDescriptor(
+            task_type=task_type, queue_type=CTQ,
+            inputs=[Range(base_in, r, 0, in_t.rows),
+                    Range(base_w, r, 0, w_t.rows)],
+            outputs=[Range(base_out, r, 0, out_t.rows)],
+            task_split_value=in_t.rows,
+            flops=2.0 * in_t.rows * k * n,
+            read_bytes=in_t.rows * in_row_b + w_t.rows * w_t.row_bytes,
+            write_bytes=out_t.rows * out_row_b,
+            meta={"fallback": True})]
+
+    m_split = max(1, op.task_num // cfg.e_loc)
+    chunk = rpe // m_split
+    tds = []
+    for e in range(cfg.e_loc):
+        for m in range(m_split):
+            lo = e * rpe + m * chunk
+            hi = lo + chunk
+            k = in_row_b // _db(cfg)
+            n = out_row_b // (_db(cfg) if task_type != "GMMWGrad" else 4)
+            if task_type == "GMMWGrad":
+                # dW[e] = act[e]^T @ grad[e]; "rows" of the weight tensor are
+                # expert blocks; all m-chunks of expert e accumulate into it.
+                out_rng = Range(base_out, r, e, e + 1)
+                flops = 2.0 * chunk * k * (op.inputs[1].row_bytes // _db(cfg))
+                reads = [Range(base_in, r, lo, hi),
+                         Range(op.inputs[1].name.split("@")[0], r, lo, hi)]
+                wbytes = out_t.row_bytes
+            else:
+                out_rng = Range(base_out, r, lo, hi)
+                flops = 2.0 * chunk * k * n
+                reads = [Range(base_in, r, lo, hi),
+                         Range(base_w, r, e, e + 1)]
+                wbytes = chunk * out_row_b
+            tds.append(TaskDescriptor(
+                task_type=task_type, queue_type=CTQ,
+                inputs=reads, outputs=[out_rng],
+                task_split_value=chunk,
+                flops=flops,
+                read_bytes=chunk * in_row_b + w_t.row_bytes,
+                write_bytes=wbytes,
+                meta={"expert": e, "m": m, **op.meta}))
+    return tds
+
+
+@fill_config("gmm")
+def _fill_gmm(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]:
+    return _gmm_tiles(cfg, op, "GMM")
+
+
+@fill_config("gmm_wgrad")
+def _fill_gmm_wgrad(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]:
+    return _gmm_tiles(cfg, op, "GMMWGrad")
+
+
+# -- Vector elementwise ops aligned to GMM row partitions --------------------
+
+def _rowwise_tiles(cfg: ScheduleConfig, op: OperatorNode,
+                   task_type: str) -> list[TaskDescriptor]:
+    r = op.rank
+    in_t = op.inputs[0]
+    out_t = op.outputs[0]
+    base_in = in_t.name.split("@")[0]
+    base_out = out_t.name.split("@")[0]
+    extra = [t for t in op.inputs[1:]]
+
+    if op.task_num == 1:
+        reads = [Range(base_in, r, 0, in_t.rows)] + [
+            Range(t.name.split("@")[0], r, 0, t.rows) for t in extra]
+        return [TaskDescriptor(
+            task_type=task_type, queue_type=VTQ,
+            inputs=reads,
+            outputs=[Range(base_out, r, 0, out_t.rows)],
+            task_split_value=in_t.rows,
+            read_bytes=sum(t.nbytes for t in op.inputs),
+            write_bytes=out_t.nbytes,
+            meta={"fallback": True})]
+
+    n = op.task_num
+    chunk = in_t.rows // n
+    tds = []
+    for i in range(n):
+        lo, hi = i * chunk, (i + 1) * chunk
+        reads = [Range(base_in, r, lo, hi)] + [
+            Range(t.name.split("@")[0], r, lo, hi) for t in extra]
+        tds.append(TaskDescriptor(
+            task_type=task_type, queue_type=VTQ,
+            inputs=reads,
+            outputs=[Range(base_out, r, lo, hi)],
+            task_split_value=chunk,
+            read_bytes=chunk * in_t.row_bytes
+            + sum(chunk * t.row_bytes for t in extra),
+            write_bytes=chunk * out_t.row_bytes,
+            meta={"expert": i // max(1, n // cfg.e_loc)}))
+    return tds
+
+
+@fill_config("swiglu")
+def _fill_swiglu(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]:
+    return _rowwise_tiles(cfg, op, "SwiGLU")
+
+
+@fill_config("swiglu_grad")
+def _fill_swiglu_grad(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]:
+    return _rowwise_tiles(cfg, op, "SwiGLUGrad")
+
+
+# Generic elementwise ops used by the §6 microbenchmarks.
+@fill_config("elementwise")
+def _fill_elementwise(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]:
+    return _rowwise_tiles(cfg, op, op.meta.get("task_type", "Elementwise"))

@@ -1,0 +1,153 @@
+"""Backward Pallas kernels for the fused GMM+SwiGLU (custom VJP).
+
+Flash-style: the forward saves only (x, w_in); both backward kernels
+recompute the gate/up activations tile-by-tile in VMEM instead of
+round-tripping the [E, C, 2F] intermediate through HBM — the same
+producer/consumer-residency insight as the forward, applied to training.
+
+    dx  = dg·wgᵀ + du·wuᵀ   (accumulated over F tiles, grid-revisited)
+    dwg = xᵀ·dg, dwu = xᵀ·du (accumulated over M tiles)
+with dg = dout ⊙ u ⊙ silu'(g), du = dout ⊙ silu(g).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _silu_grads(x, wg, wu, dout):
+    """Recompute tile activations and return (dg, du) in fp32."""
+    g = jax.lax.dot_general(x, wg, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    sig = jax.nn.sigmoid(g)
+    silu = g * sig
+    dsilu = sig * (1.0 + g * (1.0 - sig))
+    do = dout.astype(jnp.float32)
+    return do * u * dsilu, do * silu
+
+
+def _dx_kernel(x_ref, w_ref, do_ref, dx_ref):
+    # grid (E, M, F): dx block [1, bm, K] accumulates over the F dimension.
+    f = pl.program_id(2)
+    x = x_ref[0]
+    wg = w_ref[0, :, 0, :]
+    wu = w_ref[0, :, 1, :]
+    dg, du = _silu_grads(x, wg, wu, do_ref[0])
+    part = (jax.lax.dot_general(dg, wg, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+            + jax.lax.dot_general(du, wu, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32))
+
+    @pl.when(f == 0)
+    def _init():
+        dx_ref[0] = part.astype(dx_ref.dtype)
+
+    @pl.when(f > 0)
+    def _acc():
+        dx_ref[0] = (dx_ref[0].astype(jnp.float32)
+                     + part).astype(dx_ref.dtype)
+
+
+def _dw_kernel(x_ref, w_ref, do_ref, dw_ref):
+    # grid (E, F, M): dw block [1, K, 2, bf] accumulates over the M dim.
+    m = pl.program_id(2)
+    x = x_ref[0]
+    wg = w_ref[0, :, 0, :]
+    wu = w_ref[0, :, 1, :]
+    dg, du = _silu_grads(x, wg, wu, do_ref[0])
+    dwg = jax.lax.dot_general(x, dg, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    dwu = jax.lax.dot_general(x, du, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(m == 0)
+    def _init():
+        dw_ref[0, :, 0, :] = dwg.astype(dw_ref.dtype)
+        dw_ref[0, :, 1, :] = dwu.astype(dw_ref.dtype)
+
+    @pl.when(m > 0)
+    def _acc():
+        dw_ref[0, :, 0, :] = (dw_ref[0, :, 0, :].astype(jnp.float32)
+                              + dwg).astype(dw_ref.dtype)
+        dw_ref[0, :, 1, :] = (dw_ref[0, :, 1, :].astype(jnp.float32)
+                              + dwu).astype(dw_ref.dtype)
+
+
+def _pick(dim, pref):
+    b = min(pref, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bf", "interpret"))
+def gmm_swiglu_bwd(x, w4, dout, *, bm=128, bf=128, interpret=False):
+    """x: [E,C,K]; w4: [E,K,2,F]; dout: [E,C,F] → (dx, dw4)."""
+    E, C, K = x.shape
+    F = w4.shape[-1]
+    bm = _pick(C, bm)
+    bf = _pick(F, bf)
+
+    dx = pl.pallas_call(
+        _dx_kernel,
+        grid=(E, C // bm, F // bf),
+        in_specs=[
+            pl.BlockSpec((1, bm, K), lambda e, i, f: (e, i, 0)),
+            pl.BlockSpec((1, K, 2, bf), lambda e, i, f: (e, 0, 0, f)),
+            pl.BlockSpec((1, bm, bf), lambda e, i, f: (e, i, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, K), lambda e, i, f: (e, i, 0)),
+        # fp32 accumulator output (cast to the primal dtype by the caller)
+        # — grid-revisited blocks must not round-trip through bf16.
+        out_shape=jax.ShapeDtypeStruct((E, C, K), jnp.float32),
+        interpret=interpret,
+    )(x, w4, dout)
+
+    dw4 = pl.pallas_call(
+        _dw_kernel,
+        grid=(E, F // bf, C // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, K), lambda e, f, m: (e, m, 0)),
+            pl.BlockSpec((1, K, 2, bf), lambda e, f, m: (e, 0, 0, f)),
+            pl.BlockSpec((1, bm, bf), lambda e, f, m: (e, m, f)),
+        ],
+        out_specs=pl.BlockSpec((1, K, 2, bf), lambda e, f, m: (e, 0, 0, f)),
+        out_shape=jax.ShapeDtypeStruct((E, K, 2, F), jnp.float32),
+        interpret=interpret,
+    )(x, w4, dout)
+    return dx, dw4
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper: fully-Pallas fused GMM+SwiGLU for training.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def gmm_swiglu_trainable(x, w_in, interpret=False):
+    from .gmm_swiglu import gmm_swiglu
+    return gmm_swiglu(x, w_in, interpret=interpret)
+
+
+def _fwd(x, w_in, interpret):
+    from .gmm_swiglu import gmm_swiglu
+    return gmm_swiglu(x, w_in, interpret=interpret), (x, w_in)
+
+
+def _bwd(interpret, res, dout):
+    x, w_in = res
+    E, K = x.shape[0], x.shape[2]
+    F = w_in.shape[-1] // 2
+    w4 = w_in.reshape(E, K, 2, F)
+    dx, dw4 = gmm_swiglu_bwd(x, w4, dout, interpret=interpret)
+    return dx.astype(x.dtype), dw4.reshape(E, K, 2 * F).astype(w_in.dtype)
+
+
+gmm_swiglu_trainable.defvjp(_fwd, _bwd)

@@ -1,0 +1,53 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU backends (this container) so the same
+call sites run the kernel bodies in Python for correctness validation and
+compile to real Mosaic kernels on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gmm import gmm
+from .gmm_swiglu import gmm_swiglu
+from .swiglu_add import swiglu_add_interleaved, swiglu_add_serial
+
+
+def _interp() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def grouped_gemm(x, w, *, bm: int = 128, bn: int = 128):
+    """[E, C, K] × [E, K, N] → [E, C, N] (expert-block tiles, full K)."""
+    return gmm(x, w, bm=bm, bn=bn, interpret=_interp())
+
+
+def fused_gmm_swiglu(x, w_in, *, bm: int = 128, bn: int = 128):
+    """[E, C, K] × [E, K, 2F] → [E, C, F], SwiGLU fused in VMEM."""
+    return gmm_swiglu(x, w_in, bm=bm, bn=bn, interpret=_interp())
+
+
+def moe_expert_ffn(x, w_in, w_down, act: str = "swiglu", *, bm: int = 128,
+                   trainable: bool = False):
+    """Full expert FFN via the fused kernels — drop-in ``gmm_fn`` for
+    ``models.moe.moe_grouped``. Falls back to einsum for non-swiglu acts.
+
+    ``trainable=True`` routes through the custom-VJP variant whose backward
+    is also Pallas (flash-style recompute, fp32 accumulators)."""
+    if act != "swiglu":
+        from repro.models.moe import expert_ffn
+        return expert_ffn(w_in, w_down, x, act)
+    if trainable:
+        from .gmm_swiglu_bwd import gmm_swiglu_trainable
+        g = gmm_swiglu_trainable(x, w_in.astype(x.dtype), _interp())
+    else:
+        g = fused_gmm_swiglu(x, w_in.astype(x.dtype), bm=bm)
+    return grouped_gemm(g, w_down.astype(x.dtype), bm=bm)
+
+
+def swiglu_add(h, y, *, mode: str = "interleaved", bm: int = 256):
+    fn = (swiglu_add_interleaved if mode == "interleaved"
+          else swiglu_add_serial)
+    return fn(h, y, bm=bm, interpret=_interp())

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x, w):
+    """Grouped GEMM. x: [E, C, K]; w: [E, K, N] → [E, C, N]."""
+    return jnp.einsum("eck,ekn->ecn", x, w)
+
+
+def gmm_swiglu_ref(x, w_in):
+    """Fused GMM1 + SwiGLU. x: [E, C, K]; w_in: [E, K, 2F] → [E, C, F]."""
+    h = jnp.einsum("eck,ekf->ecf", x, w_in)
+    f = h.shape[-1] // 2
+    return jax.nn.silu(h[..., :f]) * h[..., f:]
+
+
+def swiglu_ref(h):
+    """h: [M, 2F] → [M, F]."""
+    f = h.shape[-1] // 2
+    return jax.nn.silu(h[..., :f]) * h[..., f:]
+
+
+def swiglu_add_ref(h, y):
+    """SwiGLU followed by residual Add: [M, 2F], [M, F] → [M, F]."""
+    return swiglu_ref(h) + y
+
+
+def moe_ffn_ref(x, w_in, w_down):
+    """Full expert FFN: x: [E, C, D] → [E, C, D]."""
+    g = gmm_swiglu_ref(x, w_in)
+    return jnp.einsum("ecf,efd->ecd", g, w_down)

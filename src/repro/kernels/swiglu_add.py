@@ -1,0 +1,87 @@
+"""SwiGLU + Add pair — the §6.1 microbenchmark workload, two ways.
+
+``serial``      — two pallas_calls: SwiGLU writes its full output to HBM,
+                  Add reads it back (the kernel-by-kernel baseline).
+``interleaved`` — one pallas_call whose tile applies SwiGLU and Add before
+                  anything leaves VMEM (the statically-scheduled tile
+                  interleaving of the paper, with the reuse window moved
+                  from L2 into VMEM).
+
+Shapes follow the paper: SwiGLU input [M, 4096], Add operand [M, 2048].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import swiglu_add_ref, swiglu_ref  # noqa: F401
+
+
+def _swiglu_kernel(h_ref, o_ref):
+    h = h_ref[...]
+    f = h.shape[-1] // 2
+    a, b = h[:, :f], h[:, f:]
+    af = a.astype(jnp.float32)
+    o_ref[...] = (af * jax.nn.sigmoid(af) * b.astype(jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _swiglu_add_kernel(h_ref, y_ref, o_ref):
+    h = h_ref[...]
+    f = h.shape[-1] // 2
+    a, b = h[:, :f], h[:, f:]
+    af = a.astype(jnp.float32)
+    g = af * jax.nn.sigmoid(af) * b.astype(jnp.float32)
+    o_ref[...] = (g + y_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def swiglu_add_serial(h, y, *, bm: int = 256, interpret: bool = False):
+    """Two kernels with an HBM round-trip between them."""
+    M, F2 = h.shape
+    F = F2 // 2
+    bm = min(bm, M)
+    assert M % bm == 0
+    g = pl.pallas_call(
+        _swiglu_kernel,
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((bm, F2), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, F), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, F), h.dtype),
+        interpret=interpret,
+    )(h)
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((bm, F), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, F), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, F), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, F), h.dtype),
+        interpret=interpret,
+    )(g, y)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def swiglu_add_interleaved(h, y, *, bm: int = 256, interpret: bool = False):
+    """One fused tile program — the intermediate stays in VMEM."""
+    M, F2 = h.shape
+    F = F2 // 2
+    bm = min(bm, M)
+    assert M % bm == 0
+    return pl.pallas_call(
+        _swiglu_add_kernel,
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((bm, F2), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, F), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, F), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, F), h.dtype),
+        interpret=interpret,
+    )(h, y)

@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — JAX locks the device count at first
+init, and the dry-run needs 512 placeholder host devices for the production
+meshes. Everything else (smoke tests, benches) sees the real device count.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, get_config                     # noqa: E402
+from repro.configs.shapes import (SHAPES, cells, input_specs,   # noqa: E402
+                                  skip_reason)
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch import steps as St                            # noqa: E402
+from repro.models import model as M                             # noqa: E402
+from repro.optim import adamw                                   # noqa: E402
+from repro.parallel.ep import EPConfig                          # noqa: E402
+from repro.parallel import roofline as R                        # noqa: E402
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    sp = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1)
+    mult = 6 if sp.kind == "train" else 2
+    return mult * n_active * tokens
+
+
+def model_bytes(cfg, shape_name: str) -> float:
+    """Minimal achievable HBM traffic per step (global): parameter reads,
+    optimizer-state read+write for train, full cache read for decode."""
+    sp = SHAPES[shape_name]
+    n = cfg.param_count()
+    if sp.kind == "train":
+        # bf16 params read (fwd+bwd ≈ 2 passes) + grads rw + m/v/master rw.
+        return n * (2 * 2 + 2 * 4 + 2 * 3 * 4)
+    total = 2.0 * n
+    if sp.kind == "decode":
+        cache_shape = jax.eval_shape(
+            lambda: M.init_cache(cfg, sp.global_batch, sp.seq_len))
+        total += sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(cache_shape))
+    return total
+
+
+def _compile_step(cfg, shape_name: str, mesh, ep_mode: str,
+                  seq_parallel: bool, policy_cfg=None, mode: str = "tp_sp"):
+    """policy_cfg pins FSDP decisions to the *real* config when compiling
+    reduced-trip-count probe variants — and switches them to accum=1:
+    the grad-accumulation loop is also a while op whose body HloCostAnalysis
+    counts once, and accum=1 at full batch is the same math (compile-only,
+    so the probe's activation memory is irrelevant)."""
+    policy = policy_cfg or cfg
+    is_probe = policy_cfg is not None
+    sp = SHAPES[shape_name]
+    ep = (EPConfig(mode=ep_mode) if cfg.family == "moe" else None)
+    n_params = policy.param_count()
+    accum = 1 if is_probe else (
+        8 if n_params > 100e9 else (4 if n_params > 10e9 else 1))
+    fns = St.make_steps(cfg, mesh, ep=ep, seq_parallel=seq_parallel,
+                        accum_steps=accum, fsdp=n_params > 10e9, mode=mode)
+    # Step-boundary params are the bf16 compute copies; the fp32 masters
+    # live inside the optimizer state (mixed precision done properly).
+    params_shape = jax.eval_shape(
+        lambda: adamw.cast_params(M.init_params(cfg, jax.random.PRNGKey(0)),
+                                  cfg.compute_dtype))
+    batch = input_specs(cfg, shape_name)
+    with jax.set_mesh(mesh):
+        if sp.kind == "train":
+            opt_shape = jax.eval_shape(adamw.init_opt_state, params_shape)
+            step = St.jit_train_step(fns, params_shape, batch)
+            lowered = step.lower(params_shape, opt_shape, batch)
+        elif sp.kind == "prefill":
+            step = St.jit_prefill_step(fns, params_shape, batch, sp.seq_len)
+            lowered = step.lower(params_shape, batch)
+        else:  # decode
+            cache_shape = jax.eval_shape(
+                lambda: M.init_cache(cfg, sp.global_batch, sp.seq_len))
+            step = St.jit_decode_step(fns, params_shape,
+                                      batch["tokens"], cache_shape)
+            lowered = step.lower(params_shape, batch["tokens"], cache_shape)
+        return lowered.compile()
+
+
+def _trips(cfg) -> int:
+    """Scan trip count of the layer stack."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // len(cfg.hybrid_pattern)
+    return cfg.n_layers
+
+
+def _with_trips(cfg, trips: int):
+    if cfg.family == "hybrid":
+        pat = len(cfg.hybrid_pattern)
+        tail = cfg.n_layers % pat
+        return dataclasses.replace(cfg, n_layers=trips * pat + tail,
+                                   scan_layers=False)
+    return dataclasses.replace(cfg, n_layers=trips, scan_layers=False)
+
+
+def _costs_of(compiled):
+    ca = compiled.cost_analysis() or {}
+    colls = R.parse_collectives(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            float(colls.total_bytes))
+
+
+def extrapolated_costs(cfg, shape_name: str, mesh, ep_mode: str,
+                       seq_parallel: bool, mode: str = "tp_sp"):
+    """XLA's HloCostAnalysis visits while (scan) bodies once — regardless of
+    trip count — so scanned stacks under-report flops / bytes / collective
+    bytes. Compile small *unrolled* variants (2 and 3 trips, scan_layers off
+    so every layer is materialized in the HLO) and evaluate the affine model
+    ``cost(L) = a + b·L`` at the real trip count."""
+    c2 = _compile_step(_with_trips(cfg, 2), shape_name, mesh, ep_mode,
+                       seq_parallel, policy_cfg=cfg, mode=mode)
+    c3 = _compile_step(_with_trips(cfg, 3), shape_name, mesh, ep_mode,
+                       seq_parallel, policy_cfg=cfg, mode=mode)
+    v2, v3 = _costs_of(c2), _costs_of(c3)
+    trips = _trips(cfg)
+    return tuple(v2[i] + (v3[i] - v2[i]) * (trips - 2) for i in range(3))
+
+
+def lower_cell(cfg, shape_name: str, mesh, *, ep_mode: str = "hyperparallel",
+               seq_parallel: bool = True, verbose: bool = True,
+               extrapolate: bool = True, mode: str = "tp_sp"):
+    """Lower + compile one cell; returns (Roofline, compile_seconds)."""
+    t0 = time.time()
+    compiled = _compile_step(cfg, shape_name, mesh, ep_mode, seq_parallel,
+                             mode=mode)
+    dt = time.time() - t0
+
+    chips = mesh.devices.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    rf = R.extract(cfg.name, shape_name, mesh_name, chips, compiled,
+                   model_flops(cfg, shape_name),
+                   model_bytes(cfg, shape_name))
+    if extrapolate:
+        fl, by, cb = extrapolated_costs(cfg, shape_name, mesh, ep_mode,
+                                        seq_parallel, mode=mode)
+        rf.flops_per_device = fl
+        rf.bytes_per_device = by
+        rf.collective_bytes = cb
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB")
+        print(f"  cost_analysis: flops/dev={rf.flops_per_device:.3e} "
+              f"bytes/dev={rf.bytes_per_device:.3e}")
+        print(f"  collectives: {rf.coll_counts} "
+              f"bytes/dev={rf.collective_bytes:.3e}")
+        print(f"  roofline: compute={rf.t_compute*1e3:.2f}ms "
+              f"memory={rf.t_memory*1e3:.2f}ms "
+              f"collective={rf.t_collective*1e3:.2f}ms "
+              f"→ {rf.bottleneck}-bound, frac={rf.roofline_frac:.3f}")
+    return rf, dt
+
+
+def run_all(archs, shapes, *, multi_pod_only=False, single_pod_only=False,
+            ep_mode="hyperparallel", mode="tp_sp", out=None):
+    meshes = []
+    if not multi_pod_only:
+        meshes.append(("1x16x16", make_production_mesh(multi_pod=False)))
+    if not single_pod_only:
+        meshes.append(("2x16x16", make_production_mesh(multi_pod=True)))
+
+    rows, failures = [], []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            why = skip_reason(cfg, shape_name)
+            if why:
+                print(f"SKIP {arch} × {shape_name}: {why}")
+                continue
+            for mesh_name, mesh in meshes:
+                print(f"RUN  {arch} × {shape_name} × {mesh_name}")
+                try:
+                    rf, dt = lower_cell(cfg, shape_name, mesh,
+                                        ep_mode=ep_mode, mode=mode)
+                    rows.append({**rf.row(), "compile_s": round(dt, 1)})
+                    print(f"  OK in {dt:.1f}s")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape_name, mesh_name, str(e)))
+                    print(f"  FAIL: {e}")
+                    traceback.print_exc(limit=3)
+    if out:
+        with open(out, "w") as f:
+            json.dump({"rows": rows,
+                       "failures": [list(f_) for f_ in failures]}, f,
+                      indent=1, default=str)
+        print(f"wrote {out}")
+    print(f"\n{len(rows)} cells compiled, {len(failures)} failures")
+    for f_ in failures:
+        print("FAILED:", *f_[:3])
+    return rows, failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--ep-mode", default="hyperparallel",
+                    choices=["hyperparallel", "baseline"])
+    ap.add_argument("--mode", default="tp_sp",
+                    choices=["tp_sp", "zero1", "ep_dp"],
+                    help="sharding-rule mode (see DESIGN.md §5)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    run_all(archs, shapes, multi_pod_only=args.multi_pod_only,
+            single_pod_only=args.single_pod_only,
+            ep_mode=args.ep_mode, mode=args.mode, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

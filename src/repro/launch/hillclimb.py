@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower a cell under different optimization
+configurations and report the three roofline terms for each step of the
+hypothesis → change → measure loop. Results feed EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell granite_train
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import get_config                       # noqa: E402
+from repro.configs.shapes import SHAPES, input_specs       # noqa: E402
+from repro.launch import steps as St                       # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.launch.dryrun import (_costs_of, _trips,        # noqa: E402
+                                 _with_trips, model_bytes, model_flops)
+from repro.models import model as M                        # noqa: E402
+from repro.optim import adamw                              # noqa: E402
+from repro.parallel import roofline as R                   # noqa: E402
+from repro.parallel.ep import EPConfig                     # noqa: E402
+
+
+def compile_variant(cfg, shape_name, mesh, *, mode="tp_sp",
+                    ep_mode="hyperparallel", accum=None, fsdp=None,
+                    seq_parallel=True, policy_cfg=None, cap_factor=1.25):
+    policy = policy_cfg or cfg
+    sp = SHAPES[shape_name]
+    ep = (EPConfig(mode=ep_mode, capacity_factor=cap_factor)
+          if cfg.family == "moe" else None)
+    n_params = policy.param_count()
+    if accum is None:
+        accum = 1 if policy_cfg is not None else (
+            8 if n_params > 100e9 else (4 if n_params > 10e9 else 1))
+    if fsdp is None:
+        fsdp = n_params > 10e9
+    fns = St.make_steps(cfg, mesh, ep=ep, seq_parallel=seq_parallel,
+                        accum_steps=accum, fsdp=fsdp, mode=mode)
+    params_shape = jax.eval_shape(
+        lambda: adamw.cast_params(M.init_params(cfg, jax.random.PRNGKey(0)),
+                                  cfg.compute_dtype))
+    batch = input_specs(cfg, shape_name)
+    with jax.set_mesh(mesh):
+        if sp.kind == "train":
+            opt_shape = jax.eval_shape(adamw.init_opt_state, params_shape)
+            step = St.jit_train_step(fns, params_shape, batch)
+            return step.lower(params_shape, opt_shape, batch).compile()
+        if sp.kind == "prefill":
+            step = St.jit_prefill_step(fns, params_shape, batch, sp.seq_len)
+            return step.lower(params_shape, batch).compile()
+        cache_shape = jax.eval_shape(
+            lambda: M.init_cache(cfg, sp.global_batch, sp.seq_len))
+        step = St.jit_decode_step(fns, params_shape, batch["tokens"],
+                                  cache_shape)
+        return step.lower(params_shape, batch["tokens"],
+                          cache_shape).compile()
+
+
+def measure(arch, shape_name, tag, **kw):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=False)
+    compiled = compile_variant(cfg, shape_name, mesh, **kw)
+    # extrapolate scan-body costs exactly like the dry-run
+    c2 = compile_variant(_with_trips(cfg, 2), shape_name, mesh,
+                         policy_cfg=cfg, **kw)
+    c3 = compile_variant(_with_trips(cfg, 3), shape_name, mesh,
+                         policy_cfg=cfg, **kw)
+    v2, v3 = _costs_of(c2), _costs_of(c3)
+    trips = _trips(cfg)
+    fl, by, cb = (v2[i] + (v3[i] - v2[i]) * (trips - 2) for i in range(3))
+    rf = R.extract(arch, shape_name, "16x16", 256, compiled,
+                   model_flops(cfg, shape_name),
+                   model_bytes(cfg, shape_name))
+    rf.flops_per_device, rf.bytes_per_device, rf.collective_bytes = fl, by, cb
+    ma = compiled.memory_analysis()
+    row = rf.row()
+    row.update(tag=tag, args_gb=ma.argument_size_in_bytes / 2**30,
+               temp_gb=ma.temp_size_in_bytes / 2**30)
+    print(f"[{tag}] compute={rf.t_compute*1e3:8.1f}ms "
+          f"memory={rf.t_memory*1e3:8.1f}ms "
+          f"collective={rf.t_collective*1e3:8.1f}ms "
+          f"→ {rf.bottleneck}-bound frac={rf.roofline_frac:.3f} "
+          f"(args={row['args_gb']:.1f}G temp={row['temp_gb']:.1f}G)")
+    return row
+
+
+CELLS = {
+    "granite_train": ("granite-moe-3b-a800m", "train_4k"),
+    "hubert_train": ("hubert-xlarge", "train_4k"),
+    "llama_decode": ("llama3.2-3b", "decode_32k"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--variants", default="baseline,opt")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    arch, shape = CELLS[args.cell]
+    rows = []
+    for v in args.variants.split(","):
+        if v == "baseline":
+            rows.append(measure(arch, shape, "baseline(tp_sp)"))
+        elif v == "zero1":
+            rows.append(measure(arch, shape, "zero1", mode="zero1"))
+        elif v == "zero1_noremat":
+            import dataclasses as dc
+            cfg2 = dc.replace(get_config(arch), remat=False)
+            mesh = make_production_mesh(multi_pod=False)
+            compiled = compile_variant(cfg2, shape, mesh, mode="zero1")
+            c2 = compile_variant(_with_trips(cfg2, 2), shape, mesh,
+                                 mode="zero1", policy_cfg=cfg2)
+            c3 = compile_variant(_with_trips(cfg2, 3), shape, mesh,
+                                 mode="zero1", policy_cfg=cfg2)
+            v2, v3 = _costs_of(c2), _costs_of(c3)
+            trips = _trips(cfg2)
+            fl, by, cb = (v2[i] + (v3[i] - v2[i]) * (trips - 2)
+                          for i in range(3))
+            rf = R.extract(arch, shape, "16x16", 256, compiled,
+                           model_flops(cfg2, shape),
+                           model_bytes(cfg2, shape))
+            rf.flops_per_device, rf.bytes_per_device = fl, by
+            rf.collective_bytes = cb
+            ma = compiled.memory_analysis()
+            print(f"[zero1_noremat] compute={rf.t_compute*1e3:8.1f}ms "
+                  f"memory={rf.t_memory*1e3:8.1f}ms "
+                  f"collective={rf.t_collective*1e3:8.1f}ms "
+                  f"→ {rf.bottleneck}-bound frac={rf.roofline_frac:.3f} "
+                  f"(temp={ma.temp_size_in_bytes/2**30:.1f}G)")
+            rows.append({**rf.row(), "tag": "zero1_noremat"})
+        elif v == "ep_dp":
+            rows.append(measure(arch, shape, "ep_dp", mode="ep_dp"))
+        elif v == "ep_dp_savemoe":
+            import dataclasses as dc
+            globals()["get_config_orig"] = get_config
+            cfg2 = dc.replace(get_config(arch), remat_policy="save_moe")
+            mesh = make_production_mesh(multi_pod=False)
+            compiled = compile_variant(cfg2, shape, mesh, mode="ep_dp")
+            c2 = compile_variant(_with_trips(cfg2, 2), shape, mesh,
+                                 mode="ep_dp", policy_cfg=cfg2)
+            c3 = compile_variant(_with_trips(cfg2, 3), shape, mesh,
+                                 mode="ep_dp", policy_cfg=cfg2)
+            v2, v3 = _costs_of(c2), _costs_of(c3)
+            trips = _trips(cfg2)
+            fl, by, cb = (v2[i] + (v3[i] - v2[i]) * (trips - 2)
+                          for i in range(3))
+            rf = R.extract(arch, shape, "16x16", 256, compiled,
+                           model_flops(cfg2, shape),
+                           model_bytes(cfg2, shape))
+            rf.flops_per_device, rf.bytes_per_device = fl, by
+            rf.collective_bytes = cb
+            ma = compiled.memory_analysis()
+            print(f"[ep_dp_savemoe] compute={rf.t_compute*1e3:8.1f}ms "
+                  f"memory={rf.t_memory*1e3:8.1f}ms "
+                  f"collective={rf.t_collective*1e3:8.1f}ms "
+                  f"→ {rf.bottleneck}-bound frac={rf.roofline_frac:.3f} "
+                  f"(temp={ma.temp_size_in_bytes/2**30:.1f}G)")
+            rows.append({**rf.row(), "tag": "ep_dp_savemoe"})
+        elif v == "ep_dp_baselinea2a":
+            rows.append(measure(arch, shape, "ep_dp+a2a", mode="ep_dp",
+                                ep_mode="baseline"))
+        elif v == "flashdecode_off":
+            import repro.launch.steps as Sx
+            import repro.parallel.flash_decode as FD
+            orig = FD.make_flash_decode
+            FD.make_flash_decode = lambda mesh, axis="model": (
+                lambda *a, **k: None)
+            try:
+                rows.append(measure(arch, shape, "decode_dense_gspmd"))
+            finally:
+                FD.make_flash_decode = orig
+        elif v == "nosp":
+            rows.append(measure(arch, shape, "tp_nosp",
+                                seq_parallel=False))
+        elif v == "opt":
+            mode = "ep_dp" if "moe" in arch or "granite" in arch else "zero1"
+            rows.append(measure(arch, shape, f"opt({mode})", mode=mode))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

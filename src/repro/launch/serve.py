@@ -1,0 +1,155 @@
+"""Serving driver with continuous batching.
+
+Production shape: a request queue feeds fixed-slot batched decoding —
+finished sequences immediately release their slot to the next request
+(prefill into the slot, decode continues for everyone else). Per-slot
+cache state lives in one batched cache pytree; slot refill uses masked
+scatter so everything stays jit-compiled at a fixed batch size.
+
+CPU-scale demo:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --requests 12 --slots 4 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over a batched KV cache."""
+
+    def __init__(self, cfg, params, n_slots: int, max_len: int):
+        from repro.models import model as M
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.M = M
+        self.cache = M.init_cache(cfg, n_slots, max_len,
+                                  per_slot_len=True)
+        self.active = np.zeros(n_slots, bool)
+        self.req_id = [-1] * n_slots
+        self.generated: dict[int, list[int]] = {}
+        self.budget = np.zeros(n_slots, np.int32)
+        self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
+
+        self._decode = jax.jit(
+            lambda p, t, c: M.decode_step(cfg, p, t, c))
+        # Slot prefill: run the prompt through with batch=1 and scatter the
+        # resulting cache slice into the batched cache at `slot`.
+        self._prefill1 = jax.jit(
+            lambda p, toks: M.prefill(cfg, p, {"tokens": toks},
+                                      max_len=max_len))
+
+    def _scatter_slot(self, slot: int, cache1):
+        """Write a batch-1 prefill cache into slot ``slot``.
+
+        Dispatch on the *batch-1 marker* of cache1, never on absolute sizes
+        (L == n_slots is a real collision otherwise): stacked leaves are
+        [L, 1, …] → batch at axis 1; unstacked are [1, …] → axis 0;
+        per-slot len leaves are one dim short of their target."""
+        def upd(c, c1):
+            if c.ndim == 0 or c1.ndim == 0:
+                return c1 if c.ndim == 0 else c
+            if c.ndim == c1.ndim + 1:
+                # per-slot len [L, B] ← scalar-len prefill [L]
+                return c.at[:, slot].set(c1)
+            if c1.ndim >= 2 and c1.shape[1] == 1 \
+                    and c.shape[0] == c1.shape[0]:
+                return c.at[:, slot].set(c1[:, 0])   # stacked [L, B, ...]
+            if c1.shape[0] == 1:
+                return c.at[slot].set(c1[0])         # unstacked [B, ...]
+            raise ValueError(f"unrecognized cache leaf {c.shape}/{c1.shape}")
+        self.cache = jax.tree.map(upd, self.cache, cache1)
+
+    def admit(self, rid: int, prompt: np.ndarray, max_new: int) -> bool:
+        free = np.where(~self.active)[0]
+        if not len(free):
+            return False
+        slot = int(free[0])
+        logits, cache1 = self._prefill1(
+            self.params, jnp.asarray(prompt[None, :], jnp.int32))
+        self._scatter_slot(slot, cache1)
+        tok = int(jnp.argmax(logits[0]))
+        self.generated[rid] = [tok]
+        self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
+        self.active[slot] = True
+        self.req_id[slot] = rid
+        self.budget[slot] = max_new - 1
+        return True
+
+    def step(self) -> list[int]:
+        """One batched decode step for every active slot; returns finished
+        request ids."""
+        if not self.active.any():
+            return []
+        logits, self.cache = self._decode(self.params, self.cur_tok,
+                                          self.cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.cur_tok = nxt[:, None]
+        done = []
+        for s in range(self.n_slots):
+            if not self.active[s]:
+                continue
+            self.generated[self.req_id[s]].append(int(nxt[s]))
+            self.budget[s] -= 1
+            if self.budget[s] <= 0:
+                done.append(self.req_id[s])
+                self.active[s] = False
+                self.req_id[s] = -1
+        return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    cfg = get_smoke_config(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = {i: rng.integers(0, cfg.vocab, args.prompt_len)
+               for i in range(args.requests)}
+
+    b = ContinuousBatcher(cfg, params,
+                          n_slots=args.slots,
+                          max_len=args.prompt_len + args.max_new + 1)
+    pending = list(range(args.requests))
+    finished = []
+    t0 = time.perf_counter()
+    steps = 0
+    while pending or b.active.any():
+        while pending and b.admit(pending[0], prompts[pending[0]],
+                                  args.max_new):
+            pending.pop(0)
+        finished += b.step()
+        steps += 1
+        if steps > 10000:
+            raise RuntimeError("serving loop did not converge")
+    dt = time.perf_counter() - t0
+    total_toks = sum(len(v) for v in b.generated.values())
+    print(f"served {args.requests} requests / {total_toks} tokens in "
+          f"{dt:.1f}s over {steps} batched steps "
+          f"({args.slots} slots, continuous batching)")
+    assert sorted(finished) == sorted(prompts), "all requests must finish"
+    for rid in list(prompts)[:2]:
+        print(f"  req{rid}: …{prompts[rid][-4:].tolist()} → "
+              f"{b.generated[rid][:10]}…")
+    return b
+
+
+if __name__ == "__main__":
+    main()

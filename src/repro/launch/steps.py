@@ -1,0 +1,158 @@
+"""jit-able train / prefill / decode steps wired to sharding rules + EP.
+
+``make_steps(cfg, mesh, …)`` returns closures whose in/out shardings come
+from ``ShardingRules``; the MoE EP path and the sequence-parallel activation
+constraint are installed via the ambient contexts at *trace* time, keeping
+the model code mesh-agnostic (the paper's low-intrusion integration).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel.ctx import (activation_sharding, flash_decode_context,
+                                head_sharding, moe_impl_context)
+from repro.parallel.ep import EPConfig, make_moe_ep
+from repro.parallel.sharding import ShardingRules
+
+
+@dataclasses.dataclass
+class StepFns:
+    train_step: object
+    prefill_step: object
+    decode_step: object
+    rules: ShardingRules
+    ep_cfg: Optional[EPConfig]
+
+
+def make_steps(cfg, mesh, *, opt: Optional[adamw.OptConfig] = None,
+               ep: Optional[EPConfig] = None,
+               seq_parallel: bool = True,
+               accum_steps: int = 0,
+               fsdp: Optional[bool] = None,
+               mode: str = "tp_sp",
+               grad_transform=None) -> StepFns:
+    rules = ShardingRules(cfg, mesh, fsdp=fsdp, mode=mode)
+    if mode == "ep_dp" and ep is not None:
+        ep = dataclasses.replace(ep, dp_batch=True)
+    moe_impl = (make_moe_ep(mesh, ep, cfg.act)
+                if (ep is not None and cfg.family == "moe") else None)
+    opt = opt or adamw.OptConfig()
+    if accum_steps == 0:
+        # Default policy: microbatch the big archs so train activations fit
+        # HBM (grad accumulation is the standard production lever here).
+        n_params = cfg.param_count()
+        accum_steps = 8 if n_params > 100e9 else (4 if n_params > 10e9 else 1)
+
+    import contextlib
+
+    def _ctx(B, S):
+        if rules.mode != "tp_sp":
+            return contextlib.ExitStack()   # DP modes: no SP/TP constraints
+        sp = (rules.act_spec(B) if seq_parallel and S > 1
+              and S % rules.model_n == 0 else None)
+        hs = None
+        if cfg.n_heads and cfg.n_heads % rules.model_n == 0 and S > 1:
+            hs = P(rules._batch_axis(B), None, "model", None)
+        stack = contextlib.ExitStack()
+        stack.enter_context(activation_sharding(sp))
+        stack.enter_context(head_sharding(hs))
+        return stack
+
+    # ---- training ----------------------------------------------------------
+    def train_step(params, opt_state, batch):
+        B, S = batch["labels"].shape
+
+        def loss_of(p, b):
+            with _ctx(b["labels"].shape[0], S), moe_impl_context(moe_impl):
+                return M.loss_fn(cfg, p, b)
+
+        if accum_steps > 1 and B % accum_steps == 0:
+            mb = jax.tree.map(
+                lambda a: a.reshape((accum_steps, B // accum_steps)
+                                    + a.shape[1:]), batch)
+            lv, grads = adamw.accumulate_grads(
+                lambda p, b: jax.value_and_grad(loss_of)(p, b), params, mb)
+        else:
+            lv, grads = jax.value_and_grad(loss_of)(params, batch)
+        # Pin gradient shardings to the parameter shardings so the
+        # backward-scan accumulators don't materialize unsharded (matters
+        # for FSDP expert weights: 21 GB/device without this).
+        grads = jax.tree_util.tree_map_with_path(
+            lambda path, g: jax.lax.with_sharding_constraint(
+                g, rules.param_spec(path, g.shape)), grads)
+        params2, opt_state2, metrics = adamw.apply_updates(
+            params, grads, opt_state, opt, grad_transform=grad_transform)
+        metrics["loss"] = lv
+        return params2, opt_state2, metrics
+
+    # ---- serving -----------------------------------------------------------
+    def prefill_step(params, batch, max_len: int):
+        tokens = batch.get("tokens", batch.get("features"))
+        B, S = tokens.shape[0], tokens.shape[1]
+        with _ctx(B, S), moe_impl_context(moe_impl):
+            if cfg.family == "audio":
+                return M.forward(cfg, params, batch), None
+            return M.prefill(cfg, params, batch, max_len)
+
+    # Flash-decoding: sharded one-token attention for seq-sharded caches.
+    fd_impl = None
+    if rules.model_n > 1 and cfg.n_heads:
+        from repro.parallel.flash_decode import make_flash_decode
+        fd_impl = make_flash_decode(mesh, "model")
+
+    def decode_step(params, token, cache):
+        with moe_impl_context(moe_impl), flash_decode_context(fd_impl):
+            return M.decode_step(cfg, params, token, cache)
+
+    return StepFns(train_step=train_step, prefill_step=prefill_step,
+                   decode_step=decode_step, rules=rules, ep_cfg=ep)
+
+
+# ---------------------------------------------------------------------------
+# Sharding-annotated jit wrappers (used by the launcher and the dry-run).
+# ---------------------------------------------------------------------------
+
+
+def jit_train_step(fns: StepFns, params_shape, batch_shapes):
+    rules = fns.rules
+    ps = rules.param_shardings(params_shape)
+    # ZeRO-1 modes shard the optimizer state even where params replicate.
+    oss = rules.opt_state_shardings(params_shape)         if hasattr(rules, "opt_state_shardings") else ps
+    os_ = {"m": oss, "v": oss, "master": oss,
+           "step": NamedSharding(rules.mesh, P())}
+    bs = rules.batch_shardings(batch_shapes)
+    return jax.jit(
+        fns.train_step,
+        in_shardings=(ps, os_, bs),
+        out_shardings=(ps, os_, None),
+        donate_argnums=(0, 1))
+
+
+def jit_prefill_step(fns: StepFns, params_shape, batch_shapes,
+                     max_len: int):
+    rules = fns.rules
+    ps = rules.param_shardings(params_shape)
+    bs = rules.batch_shardings(batch_shapes)
+    return jax.jit(partial(fns.prefill_step, max_len=max_len),
+                   in_shardings=(ps, bs), out_shardings=None)
+
+
+def jit_decode_step(fns: StepFns, params_shape, token_shape, cache_shape):
+    rules = fns.rules
+    ps = rules.param_shardings(params_shape)
+    ts = NamedSharding(rules.mesh,
+                       rules.batch_spec({"tokens": token_shape})["tokens"])
+    cs = rules.cache_shardings(cache_shape)
+    return jax.jit(fns.decode_step,
+                   in_shardings=(ps, ts, cs),
+                   out_shardings=(None, cs),
+                   donate_argnums=(2,))

@@ -1,0 +1,130 @@
+"""Production training launcher: mesh + sharded steps + data + FT loop.
+
+On a TPU pod this is the entrypoint a scheduler (re)starts on every host;
+on this CPU container it runs the same code path end-to-end on a small
+forced-host mesh (that is what --force-devices does), exercising sharded
+data feeding, EP execution, ZeRO-1 state, checkpoint/restart, and the
+straggler watchdog.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch granite-moe-3b-a800m --smoke --force-devices 8 \
+        --mesh 2x4 --mode ep_dp --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-3b-a800m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-sized)")
+    ap.add_argument("--mesh", default="2x4",
+                    help="dataxmodel (or podxdataxmodel)")
+    ap.add_argument("--mode", default="tp_sp",
+                    choices=["tp_sp", "zero1", "ep_dp"])
+    ap.add_argument("--ep-mode", default="hyperparallel",
+                    choices=["hyperparallel", "baseline"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--force-devices", type=int, default=0,
+                    help="force N host devices (CPU testing only)")
+    args = ap.parse_args(argv)
+
+    if args.force_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.force_devices}")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.pipeline import DataConfig, SyntheticStream
+    from repro.ft.runner import FTConfig, train_loop
+    from repro.launch import steps as St
+    from repro.models import model as M
+    from repro.optim import adamw
+    from repro.parallel.ep import EPConfig
+
+    dims = [int(x) for x in args.mesh.split("x")]
+    names = (("pod", "data", "model") if len(dims) == 3
+             else ("data", "model"))
+    mesh = jax.make_mesh(tuple(dims), names,
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(dims))
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "moe":
+        # Pad experts so E % model-axis == 0 (router never selects padding).
+        import dataclasses
+        model_n = mesh.shape.get("model", 1)
+        e_tot = cfg.moe.e_total
+        extra = (-e_tot) % model_n
+        if extra:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe,
+                n_padding_experts=cfg.moe.n_padding_experts + extra))
+    oc = adamw.OptConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                         total_steps=args.steps)
+    ep = (EPConfig(mode=args.ep_mode, capacity_factor=4.0)
+          if cfg.family == "moe" else None)
+    fns = St.make_steps(cfg, mesh, opt=oc, ep=ep, mode=args.mode)
+
+    params = adamw.cast_params(M.init_params(cfg, jax.random.PRNGKey(0)),
+                               cfg.compute_dtype)
+    opt_state = adamw.init_opt_state(params)
+    params_shape = jax.eval_shape(lambda: params)
+    batch_shapes = {
+        "tokens": jax.ShapeDtypeStruct(
+            (args.global_batch, args.seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(
+            (args.global_batch, args.seq), jnp.int32)}
+    with jax.set_mesh(mesh):
+        step = St.jit_train_step(fns, params_shape, batch_shapes)
+        ps = fns.rules.param_shardings(params_shape)
+        oss = fns.rules.opt_state_shardings(params_shape)
+        params = jax.device_put(params, ps)
+        opt_state = {
+            "m": jax.device_put(opt_state["m"], oss),
+            "v": jax.device_put(opt_state["v"], oss),
+            "master": jax.device_put(opt_state["master"], oss),
+            "step": jax.device_put(
+                opt_state["step"],
+                jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))}
+
+        stream = SyntheticStream(DataConfig(
+            vocab=cfg.vocab, seq_len=args.seq,
+            global_batch=args.global_batch))
+
+        class _Stream:
+            def sharded_batch(self, s, mesh_, sharding):
+                return stream.sharded_batch(
+                    s, mesh, fns.rules.batch_shardings(batch_shapes))
+
+        run = train_loop(
+            step_fn=step, params=params, opt_state=opt_state,
+            stream=_Stream(), mesh=mesh, batch_sharding=None,
+            n_steps=args.steps,
+            ft=FTConfig(ckpt_dir=args.ckpt_dir,
+                        ckpt_every=args.ckpt_every), log_every=5)
+
+    if run.resumed_from is not None:
+        print(f"resumed from step {run.resumed_from}")
+    for m in run.metrics_log:
+        print(f"step {m['step']:4d} loss {m['loss']:.4f} "
+              f"gnorm {m['grad_norm']:.3f} {m['step_time_s']*1e3:.0f}ms")
+    if run.stragglers:
+        print("stragglers:", run.stragglers)
+    return run
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts FFN: router + expert execution paths.
+
+Three execution paths, all numerically equivalent (tests assert it):
+
+* ``moe_dense_ref`` — one-hot einsum over all experts; the oracle.
+* ``moe_grouped``  — capacity-based dispatch/combine with sorted token
+  buffers feeding a grouped GEMM (optionally the Pallas kernel); this is the
+  single-device analogue of the paper's Dispatch→GMM→SwiGLU→GMM→Combine.
+* EP-sharded execution lives in ``repro/parallel/ep.py`` (shard_map): the
+  ``baseline`` mode uses a collective AllToAll, the ``hyperparallel`` mode
+  the RATR chunked-ppermute schedule mirroring the paper's one-sided tasks.
+
+Routing uses fixed expert capacity so shapes stay static under jit:
+``capacity = ceil(tokens · top_k / E · capacity_factor)``; overflow tokens
+are dropped (standard practice; the dense ref applies the same mask).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import glu_act
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN width (branch width)
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # Experts padded up so E % ep == 0 (router never selects padding).
+    n_padding_experts: int = 0
+
+    @property
+    def e_total(self) -> int:
+        return self.n_experts + self.n_padding_experts
+
+
+def init_moe(key, d_model: int, mc: MoEConfig, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    E = mc.e_total
+    std = d_model ** -0.5
+    return {
+        "router": jax.random.normal(k1, (d_model, E), jnp.float32) * std,
+        "w_in": jax.random.normal(k2, (E, d_model, 2 * mc.d_expert), dtype)
+        * std,
+        "w_down": jax.random.normal(k3, (E, mc.d_expert, d_model), dtype)
+        * mc.d_expert ** -0.5,
+    }
+
+
+def router_topk(p_router, x, mc: MoEConfig):
+    """Top-k routing with renormalized softmax probs.
+
+    x: [T, d] → (probs [T, k], idx [T, k]).  Padding experts are masked out.
+    """
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p_router)
+    if mc.n_padding_experts:
+        pad_mask = jnp.arange(mc.e_total) >= mc.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, mc.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    return top_p, top_i
+
+
+def load_balance_loss(p_router, x, mc: MoEConfig):
+    """Switch-style auxiliary load-balancing loss + router z-loss.
+
+    aux = E · Σ_e f_e · P_e  (f: token fraction routed to e via top-1,
+    P: mean router prob) — minimized at uniform routing; z-loss keeps
+    router logits bounded. Returns (aux, z)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p_router)
+    if mc.n_padding_experts:
+        pad = jnp.arange(mc.e_total) >= mc.n_experts
+        logits = jnp.where(pad[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top1, mc.e_total, dtype=jnp.float32),
+                 axis=0)
+    P = jnp.mean(probs, axis=0)
+    aux = mc.n_experts * jnp.sum(f * P)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return aux, z
+
+
+def capacity(tokens: int, mc: MoEConfig, ep: int = 1) -> int:
+    """Per-expert capacity, rounded up to a multiple of ``ep`` so EP
+    all-to-all chunks stay uniform."""
+    c = int(np.ceil(tokens * mc.top_k / mc.e_total * mc.capacity_factor))
+    return max(ep, ((c + ep - 1) // ep) * ep)
+
+
+def expert_ffn(w_in, w_down, x, act: str = "swiglu"):
+    """x: [E, C, d] per-expert batches → [E, C, d]."""
+    h = jnp.einsum("ecd,edf->ecf", x, w_in.astype(x.dtype))
+    h = glu_act(h, act)
+    return jnp.einsum("ecf,efd->ecd", h, w_down.astype(x.dtype))
+
+
+def make_dispatch(top_p, top_i, T: int, E: int, C: int):
+    """Position-in-expert assignment under fixed capacity.
+
+    Returns (combine_w [T,k], slot [T,k] in [0, C) or C for dropped).
+    """
+    k = top_i.shape[1]
+    flat_e = top_i.reshape(-1)                                  # [T*k]
+    # position of each (token, choice) within its expert, in token order
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)         # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1                        # running idx
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = slot < C
+    return (top_p * keep.reshape(T, k)), flat_e.reshape(T, k), \
+        jnp.where(keep, slot, C).reshape(T, k)
+
+
+def moe_dense_ref(params, x, mc: MoEConfig, act: str = "swiglu",
+                  cap: Optional[int] = None):
+    """One-hot dense-einsum oracle (same capacity-drop mask, no scatter)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E = mc.e_total
+    C = cap or capacity(T, mc)
+    top_p, top_i, slot = _routed(params, xt, mc, C)
+    # dispatch_mask[t, k, e, c]: token t's k-th choice occupies (e, c).
+    e_oh = jax.nn.one_hot(top_i, E, dtype=xt.dtype)          # [T,k,E]
+    c_oh = jax.nn.one_hot(slot, C, dtype=xt.dtype)           # [T,k,C] (C drops)
+    disp_mask = jnp.einsum("tke,tkc->tec", e_oh, c_oh)
+    disp = jnp.einsum("tec,td->ecd", disp_mask, xt)
+    out_e = expert_ffn(params["w_in"], params["w_down"], disp, act)
+    comb = jnp.einsum("tke,tkc,tk->tec", e_oh, c_oh, top_p.astype(xt.dtype))
+    y = jnp.einsum("tec,ecd->td", comb, out_e)
+    return y.reshape(B, S, d)
+
+
+def _routed(params, xt, mc: MoEConfig, C: int):
+    top_p, top_i = router_topk(params["router"], xt, mc)
+    top_p, top_i, slot = make_dispatch(top_p, top_i, xt.shape[0],
+                                       mc.e_total, C)
+    return top_p, top_i, slot
+
+
+def moe_grouped(params, x, mc: MoEConfig, act: str = "swiglu",
+                cap: Optional[int] = None, gmm_fn=None):
+    """Sorted/capacity dispatch → grouped FFN → weighted combine.
+
+    ``gmm_fn(x_sorted, group_sizes, w_in, w_down)`` may override the expert
+    FFN with the Pallas grouped-GEMM kernel; defaults to the einsum path.
+    """
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E = mc.e_total
+    C = cap or capacity(T, mc)
+    top_p, top_i, slot = _routed(params, xt, mc, C)
+
+    # Dispatch: scatter tokens into [E, C, d] expert buffers.
+    disp = jnp.zeros((E, C + 1, d), x.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(T)[:, None], top_i.shape)
+    disp = disp.at[top_i.reshape(-1), slot.reshape(-1)].add(
+        xt[tok_idx.reshape(-1)])
+    disp = disp[:, :C]
+
+    if gmm_fn is not None:
+        out_e = gmm_fn(disp, params["w_in"], params["w_down"], act)
+    else:
+        out_e = expert_ffn(params["w_in"], params["w_down"], disp, act)
+
+    # Combine: gather back with routing weights.
+    out_e = jnp.concatenate([out_e, jnp.zeros_like(out_e[:, :1])], axis=1)
+    y = jnp.zeros((T, d), x.dtype)
+    for j in range(mc.top_k):
+        y = y + (out_e[top_i[:, j], slot[:, j]]
+                 * top_p[:, j][:, None].astype(x.dtype))
+    return y.reshape(B, S, d)

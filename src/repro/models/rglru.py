@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = σ(W_a x_t + b_a)            gate
+    i_t = σ(W_x x_t + b_x)            input gate
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses ``jax.lax.associative_scan`` over the linear recurrence
+(log-depth); decode is the single-step update. The full Griffin recurrent
+block wraps the RG-LRU with a temporal conv and a GeGLU-style output gate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+C_RGLRU = 8.0
+
+
+def init_rglru(key, d_model: int, lru_width: int, conv_width: int = 4,
+               dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    std = d_model ** -0.5
+    w = lru_width
+    return {
+        "in_x": jax.random.normal(ks[0], (d_model, w), dtype) * std,
+        "in_y": jax.random.normal(ks[1], (d_model, w), dtype) * std,
+        "conv_w": jax.random.normal(ks[2], (conv_width, w), dtype) * 0.1,
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": jax.random.normal(ks[3], (w, w), jnp.float32) * w ** -0.5,
+        "gate_a_b": jnp.zeros((w,), jnp.float32),
+        "gate_x": jax.random.normal(ks[4], (w, w), jnp.float32) * w ** -0.5,
+        "gate_x_b": jnp.zeros((w,), jnp.float32),
+        # Λ init so a^c spans (0.9, 0.999) — Griffin's stable range.
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / C_RGLRU)),
+        "out": jax.random.normal(ks[5], (w, d_model), dtype) * w ** -0.5,
+    }
+
+
+def _rglru_core(x, p, h0=None):
+    """x: [B, L, W] → (h: [B, L, W], h_last). Linear recurrence scan."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xf, p["gate_a"])
+                       + p["gate_a_b"])
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xf, p["gate_x"])
+                       + p["gate_x_b"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * (i * xf)
+
+    if x.shape[1] == 1 and h0 is not None:
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None].astype(x.dtype), h
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_in, b_in = a, gated
+    if h0 is not None:
+        b_in = b_in.at[:, 0].add(a[:, 0] * h0)
+    A, Bv = jax.lax.associative_scan(op, (a_in, b_in), axis=1)
+    return Bv.astype(x.dtype), Bv[:, -1]
+
+
+def rglru_block(p, x, state=None, conv_width: int = 4):
+    """Full Griffin recurrent block. x: [B, L, d] → (y, new_state)."""
+    from .ssm import _causal_conv
+    dt = x.dtype
+    branch = jnp.einsum("bld,dw->blw", x, p["in_x"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, p["in_y"].astype(dt)),
+                       approximate=True)
+    conv_state = state["conv"] if state is not None else None
+    branch, conv_tail = _causal_conv(branch, p["conv_w"].astype(dt),
+                                     p["conv_b"].astype(dt), conv_state)
+    h0 = state["h"] if state is not None else None
+    h, h_last = _rglru_core(branch, p, h0)
+    y = jnp.einsum("blw,wd->bld", h * gate, p["out"].astype(dt))
+    new_state = ({"conv": conv_tail, "h": h_last}
+                 if state is not None else None)
+    return y, new_state
+
+
+def rglru_reference(x, p, h0=None):
+    """Sequential-scan oracle for tests."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xf, p["gate_a"])
+                       + p["gate_a_b"])
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xf, p["gate_x"])
+                       + p["gate_x_b"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * (i * xf)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    h0 = jnp.zeros_like(a[:, 0]) if h0 is None else h0
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                    jnp.moveaxis(gated, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,198 @@
+"""Mamba2 — State Space Duality (SSD), chunked training scan + decode step.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 §6: within a chunk
+the output is a masked (causal, decay-weighted) attention-like matmul; chunk
+boundary states are carried by a linear recurrence. This keeps everything
+MXU-shaped matmuls (the TPU-friendly form) with O(L·Q) memory.
+
+Decode maintains the recurrent state  S ∈ [B, H, P, N]:
+    S_t = a_t · S_t-1 + dt·B_tᵀ ⊗ x_t ;   y_t = C_t · S_t + D ⊙ x_t.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128           # N
+    head_dim: int = 64           # P
+    expand: int = 2              # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 128             # SSD chunk length Q
+
+    def n_heads(self, d_model: int) -> int:
+        return self.expand * d_model // self.head_dim
+
+
+def init_ssm(key, d_model: int, sc: SSMConfig, dtype=jnp.float32):
+    H = sc.n_heads(d_model)
+    d_in = sc.expand * d_model
+    N = sc.d_state
+    ks = jax.random.split(key, 6)
+    std = d_model ** -0.5
+    # in_proj produces [z (gate), x, B, C, dt] fused.
+    zxbcdt = d_in + d_in + N + N + H
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, zxbcdt), dtype) * std,
+        "conv_w": jax.random.normal(ks[1], (sc.conv_width, d_in + 2 * N),
+                                    dtype) * 0.1,
+        "conv_b": jnp.zeros((d_in + 2 * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (d_in, d_model), dtype)
+        * d_in ** -0.5,
+        "norm_w": jnp.zeros((d_in,), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d. x: [B, L, C]; w: [W, C]. Returns (y, tail)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(W))
+    tail = xp[:, -(W - 1):]
+    return y + b[None, None, :], tail
+
+
+def _ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD scan.
+
+    x: [b, L, H, P]; dt: [b, L, H]; A: [H] (negative rates);
+    B, C: [b, L, N] (single group); D: [H]. Returns y: [b, L, H, P].
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    Q = chunk
+    nc = L // Q
+    assert L % Q == 0, "sequence length must be a multiple of the SSD chunk"
+
+    la = (dt * A[None, None, :]).reshape(b, nc, Q, H)   # log decay per step
+    xc = x.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, N)
+    Cc = C.reshape(b, nc, Q, N)
+
+    cs = jnp.cumsum(la, axis=2)                         # [b,nc,Q,H]
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # [b,nc,Q(i),Q(j),H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # Mask *before* exp: the non-causal entries are positive and would
+    # overflow, poisoning gradients through the where.
+    decay = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+
+    # Intra-chunk (the "attention-like" quadratic term).
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)      # [b,nc,Q,Q]
+    M = scores[..., None] * decay                       # [b,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", M, dtc, xc)
+
+    # Chunk states: S_c = Σ_j exp(cs_end - cs_j) dt_j B_j x_jᵀ.
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)       # [b,nc,Q,H]
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                     Bc, dtc * decay_to_end, xc)        # [b,nc,H,N,P]
+
+    # Inter-chunk recurrence over chunk states.
+    a_chunk = jnp.exp(cs[:, :, -1, :])                  # [b,nc,H]
+
+    def step(S_prev, inp):
+        a_k, S_k = inp
+        S_new = S_prev * a_k[..., None, None] + S_k
+        return S_new, S_prev
+
+    S0 = jnp.zeros((b, H, N, P), x.dtype)
+    S_final, S_prevs = jax.lax.scan(
+        step, S0, (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(S_c, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)               # [b,nc,H,N,P]
+
+    decay_from_start = jnp.exp(cs)                      # [b,nc,Q,H]
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc, decay_from_start, S_prevs)
+
+    y = (y_intra + y_inter).reshape(b, L, H, P)
+    return y + x * D[None, None, :, None], S_final
+
+
+def ssm_forward(p, x, sc: SSMConfig, state=None):
+    """Full Mamba2 mixer. x: [B, L, d_model] → (y, new_state).
+
+    ``state`` = dict(conv [B, W-1, d_conv], ssm [B, H, N, P]) for decode.
+    """
+    Bsz, L, d_model = x.shape
+    H = sc.n_heads(d_model)
+    P, N = sc.head_dim, sc.d_state
+    d_in = sc.expand * d_model
+    dt_f = x.dtype
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dt_f))
+    z, xs, B_, C_, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, conv_tail = _causal_conv(conv_in, p["conv_w"].astype(dt_f),
+                                       p["conv_b"].astype(dt_f), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, B_, C_ = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    xh = xs.reshape(Bsz, L, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])     # [B,L,H]
+    A = -jnp.exp(p["A_log"])                                # [H] negative
+
+    new_state = None
+    if state is not None and L == 1:
+        # Recurrent decode step.
+        a = jnp.exp(dt[:, 0] * A[None, :])                  # [B,H]
+        dBx = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0].astype(dt_f),
+                         B_[:, 0], xh[:, 0])
+        S = state["ssm"] * a[..., None, None].astype(dt_f) + dBx
+        y = jnp.einsum("bn,bhnp->bhp", C_[:, 0], S)
+        y = y + xh[:, 0] * p["D"].astype(dt_f)[None, :, None]
+        y = y[:, None]                                      # [B,1,H,P]
+        new_state = {"conv": conv_tail, "ssm": S}
+    else:
+        y, S_final = _ssd_chunked(xh, dt.astype(dt_f), A.astype(dt_f), B_,
+                                  C_, p["D"].astype(dt_f), min(sc.chunk, L))
+        if state is not None:
+            # Prefill: hand the final recurrent + conv state to decode.
+            new_state = {"conv": conv_tail, "ssm": S_final}
+
+    y = y.reshape(Bsz, L, d_in)
+    # Gated RMSNorm (Mamba2's norm-before-out-proj).
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(dt_f)
+    y = y * (1.0 + p["norm_w"].astype(dt_f))[None, None, :]
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(dt_f))
+    return out, new_state
+
+
+def ssd_reference(x, dt, A, B, C, D):
+    """O(L²)-free sequential reference for tests: plain recurrence."""
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(S, inp):
+        x_t, dt_t, B_t, C_t = inp
+        a = jnp.exp(dt_t * A)                               # [b,H]
+        S = S * a[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhnp", dt_t, B_t, x_t)
+        y = jnp.einsum("bn,bhnp->bhp", C_t, S)
+        return S, y
+
+    S0 = jnp.zeros((b, H, N, P), x.dtype)
+    _, ys = jax.lax.scan(step, S0, (jnp.moveaxis(x, 1, 0),
+                                    jnp.moveaxis(dt, 1, 0),
+                                    jnp.moveaxis(B, 1, 0),
+                                    jnp.moveaxis(C, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)
+    return y + x * D[None, None, :, None]

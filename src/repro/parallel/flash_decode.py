@@ -1,0 +1,101 @@
+"""Flash-decoding over a sequence-sharded KV cache (shard_map).
+
+The naive GSPMD lowering of one-token decode against a cache sharded on the
+sequence dim turns the cache update (dynamic-update-slice at a runtime
+index) into a masked rewrite of the *entire* cache — ~25× the useful HBM
+traffic (llama decode_32k baseline: 54 ms/token vs a ~2.3 ms roofline).
+
+This module is the production fix, and it is exactly the paper's recipe
+applied to decode: make the communication/compute structure explicit to a
+scheduler instead of leaving it to collective inference —
+
+* the cache stays sharded over 'model' in S-blocks; the *owning* shard
+  performs a local in-place DUS (a put_mem_signal-style one-sided write);
+* each shard computes partial attention over its block (tile task);
+* partials merge with the online-softmax combine: a log-sum-exp psum of
+  O(B·H) stats — the event-counter-sized synchronization, not data motion.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def make_flash_decode(mesh, axis: str = "model"):
+    """Returns impl(q, k_cache, v_cache, new_k, new_v, cache_len)
+    → (out [B,1,H,hd], k_cache', v_cache'). Caches sharded P(dp, axis)."""
+    n_shards = mesh.shape[axis]
+    dp = tuple(a for a in mesh.axis_names if a != axis)
+
+    def impl(q, k_cache, v_cache, new_k, new_v, cache_len):
+        B, S, K, hd = k_cache.shape
+        H = q.shape[2]
+        if S % n_shards:
+            return None  # caller falls back to the dense path
+        b_ax = dp if B % int(np.prod([mesh.shape[a] for a in dp])) == 0 \
+            else None
+        cache_spec = P(b_ax, axis, None, None)
+        rep_spec = P(b_ax, None, None, None)
+
+        @partial(jax.shard_map, mesh=mesh,
+                 in_specs=(rep_spec, cache_spec, cache_spec, rep_spec,
+                           rep_spec, P()),
+                 out_specs=(rep_spec, cache_spec, cache_spec),
+                 check_vma=False)
+        def run(q, k_loc, v_loc, new_k, new_v, idx):
+            r = jax.lax.axis_index(axis)
+            s_loc = k_loc.shape[1]
+            owner = idx // s_loc
+            local_idx = idx % s_loc
+
+            # One-sided local write: only the owning shard updates its block.
+            # (A branchless slice+where+DUS variant was tried and *refuted*:
+            # the extra read breaks XLA's in-place aliasing and re-copies the
+            # block — see EXPERIMENTS.md §Perf iteration 3.2.)
+            def write(c, u):
+                return jax.lax.cond(
+                    owner == r,
+                    lambda a: jax.lax.dynamic_update_slice(
+                        a, u, (0, local_idx, 0, 0)),
+                    lambda a: a, c)
+
+            k_loc = write(k_loc, new_k)
+            v_loc = write(v_loc, new_v)
+
+            # Partial attention over the local block (fp32 stats).
+            g = H // K
+            qg = q.reshape(q.shape[0], 1, K, g, hd)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                           k_loc).astype(jnp.float32)
+            s = s * (1.0 / np.sqrt(hd))
+            pos = r * s_loc + jnp.arange(s_loc)
+            mask = pos <= idx                    # causal incl. new token
+            s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+            m_loc = jnp.max(s, axis=-1)                       # [b,K,g,1]
+            p = jnp.exp(s - m_loc[..., None])
+            l_loc = jnp.sum(p, axis=-1)
+            o_loc = jnp.einsum("bkgqs,bskd->bqkgd",
+                               p.astype(v_loc.dtype), v_loc)
+
+            # LSE combine across shards — O(B·H) stats, not data.
+            m_glob = jax.lax.pmax(m_loc, axis)
+            corr = jnp.exp(m_loc - m_glob)
+            l_glob = jax.lax.psum(l_loc * corr, axis)
+            o_glob = jax.lax.psum(
+                o_loc * corr[..., None].transpose(0, 3, 1, 2, 4)
+                .astype(o_loc.dtype), axis)
+            out = o_glob / jnp.maximum(
+                l_glob[..., None].transpose(0, 3, 1, 2, 4), 1e-30
+            ).astype(o_glob.dtype)
+            return (out.reshape(q.shape[0], 1, H, hd),
+                    k_loc, v_loc)
+
+        return run(q, k_cache, v_cache, new_k, new_v,
+                   jnp.asarray(cache_len, jnp.int32))
+
+    return impl

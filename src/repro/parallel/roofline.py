@@ -1,0 +1,174 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Per the grading spec (TPU v5e targets):
+
+    compute   = HLO_FLOPs            / (chips × 197 TFLOP/s)
+    memory    = HLO_bytes_accessed   / (chips × 819 GB/s)
+    collective= collective_op_bytes  / (chips × 50 GB/s/link)
+
+``compiled.cost_analysis()`` is per-device after SPMD partitioning (verified
+empirically), so the per-chip terms divide by one chip's peak directly.
+Collective bytes are parsed from the optimized HLO text — result-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (sync or async-start form), which is the per-device
+operand/result traffic the spec asks to sum. A ring-model "wire bytes"
+estimate is reported alongside for interpretation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.core.hardware import V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def wire_bytes(self, n_shards: dict | None = None) -> float:
+        """Ring-model per-device wire traffic estimate."""
+        out = 0.0
+        for kind, b in self.bytes_by_kind.items():
+            if kind == "all-reduce":
+                out += 2.0 * b          # reduce-scatter + all-gather phases
+            else:
+                out += float(b)
+        return out
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict = {}
+    by_kind: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        counts[kind] = counts.get(kind, 0) + 1
+        by_kind[kind] = by_kind.get(kind, 0) + b
+    return CollectiveStats(counts=counts, bytes_by_kind=by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    model_flops_global: float
+    arg_bytes: float
+    temp_bytes: float
+    coll_counts: dict
+    # Minimal achievable HBM traffic (params + caches + optimizer state for
+    # train), global across chips — the memory-side "useful work" analogue
+    # of 6ND. Dominant for decode where flops are negligible.
+    model_bytes_global: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / V5E.peak_flops_bf16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / V5E.hbm_gbps
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / V5E.ici_link_gbps
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / max(1.0, hlo_global)
+
+    @property
+    def useful_bytes_ratio(self) -> float:
+        hlo_global = self.bytes_per_device * self.chips
+        return self.model_bytes_global / max(1.0, hlo_global)
+
+    @property
+    def roofline_frac(self) -> float:
+        """max(useful-compute, useful-bandwidth) time / dominant bound:
+        how close the step is to the best achievable on either roofline.
+        The compute side dominates for train/prefill; the bandwidth side is
+        the meaningful one for decode (flops are negligible there)."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        t_useful_c = (self.model_flops_global / self.chips
+                      / V5E.peak_flops_bf16)
+        t_useful_m = (self.model_bytes_global / self.chips / V5E.hbm_gbps)
+        return max(t_useful_c, t_useful_m) / max(bound, 1e-12)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops_global,
+            "hlo_flops_per_dev": self.flops_per_device,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "useful_bytes_ratio": self.useful_bytes_ratio,
+            "roofline_frac": self.roofline_frac,
+            "hbm_args_gb": self.arg_bytes / 2**30,
+            "hbm_temp_gb": self.temp_bytes / 2**30,
+            "collectives": self.coll_counts,
+        }
+
+
+def extract(arch, shape, mesh_name, chips, compiled, model_flops,
+            model_bytes: float = 0.0) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes=float(colls.total_bytes),
+        model_flops_global=float(model_flops),
+        model_bytes_global=float(model_bytes),
+        arg_bytes=float(getattr(ma, "argument_size_in_bytes", 0)),
+        temp_bytes=float(getattr(ma, "temp_size_in_bytes", 0)),
+        coll_counts=colls.counts,
+    )

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Tests see the real device count (the dry-run alone forces 512 devices).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

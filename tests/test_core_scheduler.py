@@ -1,0 +1,147 @@
+"""Core scheduler unit tests: Algorithm 1, TD generation, events, SSC."""
+
+import numpy as np
+import pytest
+
+from repro.core.odg import (ScheduleConfig, build_moe_ffn_backward,
+                            build_moe_ffn_forward)
+from repro.core.reorder import ratr_order
+from repro.core.scheduler import (ScheduleError, compile_schedule,
+                                  execution_order, validate_schedule)
+from repro.core.split import propagate_splits, split_report
+from repro.core.ssc import SSCCache, schedule_to_ssc, ssc_to_schedule
+from repro.core.tasks import NO_EVENT
+
+CFG = ScheduleConfig(ep=4, e_loc=2, rows=8, d_model=32, d_ff=16)
+
+
+def test_split_propagation_counts():
+    g = build_moe_ffn_forward(CFG)
+    propagate_splits(g)
+    rep = dict(split_report(g))
+    assert rep["Dispatch@0"] == CFG.ep * CFG.e_loc
+    assert rep["GMM1@0"] == CFG.e_loc * CFG.gmm_m_split
+    assert rep["SwiGLU@0"] == CFG.e_loc * CFG.gmm_m_split
+    assert rep["Combine@0"] == CFG.ep * CFG.e_loc
+
+
+def test_split_propagation_labels():
+    g = build_moe_ffn_forward(CFG)
+    propagate_splits(g)
+    # Dispatch output (recv buffer) is row-partitioned → GMM can split.
+    assert g.tensors["x_recv@0"].split_dim == 0
+    assert g.tensors["h@1"].split_dim == 0
+
+
+def test_split_fallback_on_missing_labels():
+    """An op whose required input label is absent gets one unsplit task."""
+    from repro.core.odg import ODG, OperatorNode, SplitSpec, VECTOR
+    cfg = CFG
+    g = ODG(cfg, "forward")
+    x = g.tensor("x@0", 64, 8, external=True)  # external: never labelled
+    y = g.tensor("y@0", 64, 8)
+    g.add_op(OperatorNode(
+        name="EW@0", op_type="swiglu", resource=VECTOR, rank=0,
+        inputs=[x], outputs=[y],
+        split_spec=SplitSpec(split_inputs=((0, 0),),
+                             split_output_dims=(0,),
+                             task_num_fn=lambda c: 8)))
+    propagate_splits(g)
+    assert g.ops[0].task_num == 1          # fallback (Algorithm 1 line 12)
+
+
+def test_dispatch_gmm_event_threshold():
+    g = build_moe_ffn_forward(CFG)
+    s = compile_schedule(g)
+    # A GMM1 tile must wait for all ep source ranks' dispatch tiles.
+    gmm1 = [t for t in s.tasks if t.op_name == "GMM1@0"]
+    for td in gmm1:
+        assert td.dependent_event != NO_EVENT
+        assert td.dependent_threshold == CFG.ep
+
+
+def test_shared_event_multiple_waiters():
+    """Combine tasks of one expert share the GMM2 tile's event (§4.3)."""
+    g = build_moe_ffn_forward(CFG)
+    s = compile_schedule(g)
+    comb = [t for t in s.tasks if t.op_name == "Combine@0"
+            and t.meta.get("expert") == 0]
+    events = {t.dependent_event for t in comb}
+    assert len(events) == 1
+    assert s.events[events.pop()].threshold == 1
+
+
+def test_single_trigger_violation_detected():
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=9, d_model=32, d_ff=16,
+                         gmm_m_split=3)  # 9*4=36 rows / 3 = 12: straddles
+    with pytest.raises(ScheduleError, match="single-trigger"):
+        compile_schedule(build_moe_ffn_forward(cfg))
+
+
+def test_nested_finer_gmm_split_is_legal():
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=8, d_model=32, d_ff=16,
+                         gmm_m_split=8)  # chunks nest inside dispatch tiles
+    s = compile_schedule(build_moe_ffn_forward(cfg))
+    validate_schedule(s)
+
+
+def test_ratr_ring_order():
+    assert ratr_order(0, 4) == [1, 2, 3, 0]
+    assert ratr_order(2, 4) == [3, 0, 1, 2]
+
+
+def test_ratr_no_destination_hotspot():
+    """At every ring step the destination set is a permutation of ranks."""
+    g = build_moe_ffn_forward(CFG)
+    s = compile_schedule(g, ratr=True)
+    per_rank_dsts = {}
+    for r in range(CFG.ep):
+        dsts = []
+        for tid in s.queue(r, "VTQ"):
+            td = s.tasks[tid]
+            if td.op_name.startswith("Dispatch") and td.dst_rank >= 0:
+                if td.dst_rank not in dsts:
+                    dsts.append(td.dst_rank)
+        per_rank_dsts[r] = dsts
+    for step in range(CFG.ep):
+        step_dsts = {per_rank_dsts[r][step] for r in range(CFG.ep)}
+        assert step_dsts == set(range(CFG.ep)), f"hotspot at step {step}"
+
+
+def test_gmm_interleave_alternates_branches():
+    g = build_moe_ffn_backward(CFG)
+    s = compile_schedule(g, gmm_interleave=True)
+    ctq = [s.tasks[t].op_name.split("@")[0] for t in s.queue(0, "CTQ")]
+    head = ctq[:4]
+    assert head == ["GMM_act_grad", "GMM_w2_grad",
+                    "GMM_act_grad", "GMM_w2_grad"]
+
+
+def test_reorderings_stay_legal():
+    for direction, builder in (("f", build_moe_ffn_forward),
+                               ("b", build_moe_ffn_backward)):
+        s = compile_schedule(builder(CFG), ratr=True, gmm_interleave=True)
+        validate_schedule(s)
+        order = execution_order(s)
+        assert sorted(order) == list(range(s.n_tasks))
+
+
+def test_ssc_roundtrip():
+    s = compile_schedule(build_moe_ffn_forward(CFG), ratr=True)
+    s2 = ssc_to_schedule(schedule_to_ssc(s))
+    assert s2.n_tasks == s.n_tasks
+    assert s2.queues == s.queues
+    assert {e.eid: e.threshold for e in s2.events.values()} == \
+        {e.eid: e.threshold for e in s.events.values()}
+    for a, b in zip(s.tasks, s2.tasks):
+        assert a.inputs == b.inputs and a.outputs == b.outputs
+        assert a.dependent_event == b.dependent_event
+
+
+def test_ssc_cache_reuse():
+    cache = SSCCache()
+    cache.get_or_compile(CFG, "forward", ratr=True)
+    cache.get_or_compile(CFG, "forward", ratr=True)
+    assert cache.hits == 1 and cache.misses == 1
+    cache.get_or_compile(CFG, "backward", ratr=True)
+    assert cache.misses == 2

@@ -1,0 +1,112 @@
+"""Unit tests: HLO collective parser, roofline math, sharding rules."""
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.hardware import V5E
+from repro.parallel.roofline import (Roofline, _shape_bytes,
+                                     parse_collectives)
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,4096,2048]{2,1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[1024,512]{1,0} all-reduce(%y), to_apply=%add
+  %rs = (bf16[8,128]{1,0}, bf16[8,128]{1,0}) reduce-scatter(%a, %b)
+  %a2a = bf16[4,64,64]{2,1,0} all-to-all(%c), dimensions={0}
+  %cps = bf16[2,256]{1,0} collective-permute-start(%d)
+  %cpd = bf16[2,256]{1,0} collective-permute-done(%cps)
+  %not = bf16[9,9]{1,0} add(%e, %f)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,4096,2048]") == 16 * 4096 * 2048 * 2
+    assert _shape_bytes("f32[1024,512]") == 1024 * 512 * 4
+    assert _shape_bytes("(bf16[8,128], bf16[8,128])") == 2 * 8 * 128 * 2
+
+
+def test_parse_collectives():
+    st = parse_collectives(HLO)
+    assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                         "reduce-scatter": 1, "all-to-all": 1,
+                         "collective-permute": 1}
+    expect = (16 * 4096 * 2048 * 2 + 1024 * 512 * 4 + 2 * 8 * 128 * 2
+              + 4 * 64 * 64 * 2 + 2 * 256 * 2)
+    assert st.total_bytes == expect
+    # -done must not double count; non-collectives ignored.
+
+
+def test_roofline_terms_and_bottleneck():
+    rf = Roofline(arch="x", shape="train_4k", mesh="16x16", chips=256,
+                  flops_per_device=197e12, bytes_per_device=819e9 * 2,
+                  collective_bytes=50e9 * 0.5,
+                  model_flops_global=197e12 * 256 * 0.5,
+                  arg_bytes=0, temp_bytes=0, coll_counts={})
+    assert abs(rf.t_compute - 1.0) < 1e-9
+    assert abs(rf.t_memory - 2.0) < 1e-9
+    assert abs(rf.t_collective - 0.5) < 1e-9
+    assert rf.bottleneck == "memory"
+    assert abs(rf.roofline_frac - 0.25) < 1e-9  # useful 0.5s / bound 2.0s
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 2, "model": 4}
+
+
+def _rules(mode="tp_sp", arch="olmo-1b"):
+    from repro.parallel.sharding import ShardingRules
+    return ShardingRules(get_config(arch), _FakeMesh(), mode=mode)
+
+
+def test_param_specs_tp_sp():
+    r = _rules()
+
+    class K:
+        key = "w_in"
+    # mlp w_in [d, 2f]: output dim over model
+    assert r.param_spec((K(),), (2048, 16384)) == P(None, "model")
+
+
+def test_param_specs_zero1_replicated():
+    r = _rules(mode="zero1")
+
+    class K:  # fake path key
+        key = "wq"
+    assert r.param_spec((K(),), (2048, 2048)) == P(None, None)
+
+
+def test_opt_state_sharded_in_zero1():
+    r = _rules(mode="zero1")
+
+    class K:
+        key = "w_in"
+    spec = r.opt_state_spec((K(),), (2048, 16384))
+    flat = [a for part in spec if part
+            for a in (part if isinstance(part, tuple) else (part,))]
+    assert flat, "opt state must be sharded in zero1"
+
+
+def test_ep_dp_experts_sharded():
+    r = _rules(mode="ep_dp", arch="granite-moe-3b-a800m")
+
+    class K:
+        key = "w_in"
+    assert r.param_spec((K(),), (48, 1536, 1024)) == P("model", None, None)
+
+
+def test_batch_axes_by_mode():
+    r1 = _rules(mode="tp_sp")
+    assert r1._batch_axis(256) == ("data",)
+    r2 = _rules(mode="zero1")
+    assert r2._batch_axis(256) == ("data", "model")
+    assert r2._batch_axis(1) is None
+
+
+def test_divisibility_fallback():
+    r = _rules()
+    # dim not divisible by model axis (4) → replicated
+    assert r.param_spec((), (2048, 1023)) == P(None, None)
