@@ -49,7 +49,7 @@ def build_swiglu_add_odg(M: int, n_tiles: int, width_in: int = 4096,
     mid = g.tensor("g@0", M, width_out * 2)
     out = g.tensor("out@0", M, width_out * 2)
 
-    n_fn = (lambda c: n_tiles)
+    n_fn = (lambda c, op: n_tiles)
     g.add_op(OperatorNode(
         name="SwiGLU@0", op_type="swiglu", resource=VECTOR, rank=0,
         inputs=[h], outputs=[mid],

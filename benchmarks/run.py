@@ -22,6 +22,8 @@ SECTIONS = [
      "benchmarks.bench_swiglu_add"),
     ("sched_overhead", "Fig 10: static vs dynamic scheduling",
      "benchmarks.bench_sched_overhead"),
+    ("imbalance", "Routing-skew sweep: unified vs baseline under load skew",
+     "benchmarks.bench_imbalance"),
     ("ep_modes", "EP mode comparison on the JAX system",
      "benchmarks.bench_ep_modes"),
     ("roofline", "TPU roofline table from the dry-run",

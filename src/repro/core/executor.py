@@ -11,6 +11,9 @@ executor's outputs must match the monolithic jnp reference (forward) and
 ``jax.vjp`` of it (backward), bit-for-bit in fp32. Because execution order is
 event-driven (and can be randomized), passing tests prove the *event wiring*
 preserves the original MoE-FFN semantics under out-of-order completion.
+Under an imbalanced :class:`~repro.core.routing.RoutingPlan` the per-rank
+buffers are ragged; the ``*_plan`` reference/loader variants below work with
+per-rank lists and exercise skewed, sparse, and hotspot routing.
 
 Note: Combine here is a pure one-sided copy back to the source rank — the
 top-k weighting/accumulation lives in ``models/moe.py`` outside the
@@ -72,6 +75,9 @@ class ExecutorState:
         self.weights[(name, rank)] = np.asarray(arr, dtype=np.float32)
 
     def ensure(self, name: str, rank: int, rows: int, width: int) -> np.ndarray:
+        """Lazily create a buffer, sized strictly from the schedule's
+        precomputed ``rows_map`` (never guessed from a same-named peer,
+        which breaks once per-rank row counts differ under skew)."""
         key = (name, rank)
         if key not in self.buffers:
             rows = max(rows, self.rows_map.get(key, 0))
@@ -93,18 +99,10 @@ def _h_put_mem_signal(td: TaskDescriptor, st: ExecutorState) -> None:
     data = st.get(src.tensor, src.rank)[src.lo:src.hi]
     off = 0
     for out in td.outputs:
-        buf = st.ensure(out.tensor, out.rank, _rows_hint(st, out), data.shape[1])
+        buf = st.ensure(out.tensor, out.rank, out.hi, data.shape[1])
         n = out.hi - out.lo
         buf[out.lo:out.hi] = data[off:off + n]
         off += n
-
-
-def _rows_hint(st: ExecutorState, rng) -> int:
-    # Destination buffers are created lazily; size from any existing peer.
-    for (name, r), arr in st.buffers.items():
-        if name == rng.tensor:
-            return arr.shape[0]
-    return rng.hi
 
 
 def _h_gmm(td: TaskDescriptor, st: ExecutorState) -> None:
@@ -113,12 +111,18 @@ def _h_gmm(td: TaskDescriptor, st: ExecutorState) -> None:
     w_all = st.get(w_rng.tensor, w_rng.rank)
     transpose = td.meta.get("which") in ("act_grad", "gate_grad")
     if td.meta.get("fallback"):
-        # Unsplit task: block-diagonal GMM over all local experts.
-        rpe = st.cfg.rows_per_expert
+        # Unsplit task: block-diagonal GMM over the plan's expert blocks
+        # (ragged extents; empty experts contribute no rows).
+        plan = st.cfg.routing
+        r = td.rank
         outs = []
         for e in range(st.cfg.e_loc):
+            rows_e = plan.expert_rows(r, e)
+            if rows_e == 0:
+                continue
+            lo = plan.expert_offset(r, e)
             w = w_all[e].T if transpose else w_all[e]
-            outs.append(a[e * rpe:(e + 1) * rpe] @ w)
+            outs.append(a[lo:lo + rows_e] @ w)
         out = np.concatenate(outs, axis=0)
     else:
         w = w_all[w_rng.lo]
@@ -126,7 +130,7 @@ def _h_gmm(td: TaskDescriptor, st: ExecutorState) -> None:
             w = w.T        # activation-gradient GMMs multiply by Wᵀ
         out = a @ w
     o = td.outputs[0]
-    buf = st.ensure(o.tensor, o.rank, a.shape[0], out.shape[1])
+    buf = st.ensure(o.tensor, o.rank, o.hi, out.shape[1])
     if buf.shape[0] < o.hi:
         raise ScheduleError(f"output buffer too small for {td.op_name}")
     buf[o.lo:o.hi] = out
@@ -138,9 +142,14 @@ def _h_gmm_wgrad(td: TaskDescriptor, st: ExecutorState) -> None:
     act = st.get(act_rng.tensor, act_rng.rank)[act_rng.lo:act_rng.hi]
     key = (td.outputs[0].tensor, td.outputs[0].rank)
     if td.meta.get("fallback"):
-        rpe = st.cfg.rows_per_expert
+        plan = st.cfg.routing
+        r = td.rank
         for e in range(st.cfg.e_loc):
-            dW = act[e * rpe:(e + 1) * rpe].T @ grad[e * rpe:(e + 1) * rpe]
+            rows_e = plan.expert_rows(r, e)
+            if rows_e == 0:
+                continue      # no routed rows → zero gradient contribution
+            lo = plan.expert_offset(r, e)
+            dW = act[lo:lo + rows_e].T @ grad[lo:lo + rows_e]
             if key not in st.buffers:
                 st.buffers[key] = np.zeros(
                     (st.cfg.e_loc, dW.shape[0], dW.shape[1]),
@@ -160,8 +169,7 @@ def _h_swiglu(td: TaskDescriptor, st: ExecutorState) -> None:
     h = st.get(i.tensor, i.rank)[i.lo:i.hi]
     out = swiglu_np(h)
     o = td.outputs[0]
-    buf = st.ensure(o.tensor, o.rank, st.get(i.tensor, i.rank).shape[0],
-                    out.shape[1])
+    buf = st.ensure(o.tensor, o.rank, o.hi, out.shape[1])
     buf[o.lo:o.hi] = out
 
 
@@ -171,8 +179,7 @@ def _h_swiglu_grad(td: TaskDescriptor, st: ExecutorState) -> None:
     h = st.get(h_rng.tensor, h_rng.rank)[h_rng.lo:h_rng.hi]
     out = swiglu_grad_np(dg, h)
     o = td.outputs[0]
-    buf = st.ensure(o.tensor, o.rank, st.get(h_rng.tensor, h_rng.rank).shape[0],
-                    out.shape[1])
+    buf = st.ensure(o.tensor, o.rank, o.hi, out.shape[1])
     buf[o.lo:o.hi] = out
 
 
@@ -241,10 +248,13 @@ def make_inputs(cfg: ScheduleConfig, seed: int = 0):
     d, f = cfg.d_model, cfg.d_ff
     x_src = rng.standard_normal(
         (cfg.ep, cfg.ep * cfg.e_loc * cfg.rows, d)).astype(np.float32)
-    w1 = rng.standard_normal(
-        (cfg.ep, cfg.e_loc, d, 2 * f)).astype(np.float32) / np.sqrt(d)
-    w2 = rng.standard_normal(
-        (cfg.ep, cfg.e_loc, f, d)).astype(np.float32) / np.sqrt(f)
+    # Scale before the float32 cast — dividing after it would promote back
+    # to float64 (NumPy 2 scalar promotion) and break the fp32 bit-exact
+    # executor-vs-reference contract.
+    w1 = (rng.standard_normal((cfg.ep, cfg.e_loc, d, 2 * f))
+          / np.sqrt(d)).astype(np.float32)
+    w2 = (rng.standard_normal((cfg.ep, cfg.e_loc, f, d))
+          / np.sqrt(f)).astype(np.float32)
     return x_src, w1, w2
 
 
@@ -306,6 +316,179 @@ def load_forward_state(cfg: ScheduleConfig, st: ExecutorState,
 
 def load_backward_state(cfg: ScheduleConfig, st: ExecutorState,
                         fwd: dict, w1, w2, dy) -> None:
+    for r in range(cfg.ep):
+        st.set_buffer("dy_src", r, dy[r])
+        st.set_weight("W1", r, w1[r])
+        st.set_weight("W2", r, w2[r])
+        st.set_buffer("g_saved", r, fwd["g"][r])
+        st.set_buffer("h_saved", r, fwd["h"][r])
+        st.set_buffer("x_recv_saved", r, fwd["x_recv"][r])
+
+
+# ---------------------------------------------------------------------------
+# Ragged (plan-aware) references — imbalanced routing.
+#
+# Per-rank buffers have *different* row counts under a RoutingPlan, so the
+# ragged references work with lists of [rows_r, width] arrays instead of one
+# stacked array. The forward reference uses one matmul per expert block —
+# the same BLAS calls the executor's gmm_m_split=1 tiles issue — so
+# executor output is bit-identical, not merely close.
+# ---------------------------------------------------------------------------
+
+def make_inputs_plan(cfg: ScheduleConfig, seed: int = 0):
+    """Ragged fragment inputs: per-rank x_src list, W1/W2 per rank."""
+    plan = cfg.routing
+    rng = np.random.default_rng(seed)
+    d, f = cfg.d_model, cfg.d_ff
+    x_src = [rng.standard_normal((plan.send_rows(r), d)).astype(np.float32)
+             for r in range(cfg.ep)]
+    # Scale *before* the float32 cast: a float64 scalar divide after the cast
+    # would silently promote back to float64 and break bit-exact comparison
+    # against the executor's float32 buffers.
+    w1 = (rng.standard_normal((cfg.ep, cfg.e_loc, d, 2 * f))
+          / np.sqrt(d)).astype(np.float32)
+    w2 = (rng.standard_normal((cfg.ep, cfg.e_loc, f, d))
+          / np.sqrt(f)).astype(np.float32)
+    return x_src, w1, w2
+
+
+def _dispatch_np(plan, src_bufs: list, width: int) -> list:
+    """(dst, expert)-major send layout → (expert, src)-major recv layout."""
+    recv = []
+    for r in range(plan.ep):
+        buf = np.zeros((plan.recv_rows(r), width), dtype=np.float32)
+        for (e, s, c) in plan.recv_layout_cells(r):
+            lo = plan.recv_offset(r, e, s)
+            s_lo = plan.send_offset(s, r, e)
+            buf[lo:lo + c] = src_bufs[s][s_lo:s_lo + c]
+        recv.append(buf)
+    return recv
+
+
+def _combine_np(plan, y_bufs: list, width: int) -> list:
+    """(expert, src)-major recv layout → send layout on each source rank."""
+    ret = []
+    for s in range(plan.ep):
+        buf = np.zeros((plan.send_rows(s), width), dtype=np.float32)
+        for (d, e, c) in plan.send_cells(s):
+            lo = plan.send_offset(s, d, e)
+            y_lo = plan.recv_offset(d, e, s)
+            buf[lo:lo + c] = y_bufs[d][y_lo:y_lo + c]
+        ret.append(buf)
+    return ret
+
+
+def reference_forward_plan(cfg: ScheduleConfig, x_src, w1, w2) -> dict:
+    """Ragged Dispatch→GMM1→SwiGLU→GMM2→Combine; all values per-rank lists."""
+    plan = cfg.routing
+    d, f = cfg.d_model, cfg.d_ff
+    x_recv = _dispatch_np(plan, x_src, d)
+    h, g, y = [], [], []
+    for r in range(cfg.ep):
+        h_r = np.zeros((plan.recv_rows(r), 2 * f), dtype=np.float32)
+        g_r = np.zeros((plan.recv_rows(r), f), dtype=np.float32)
+        y_r = np.zeros((plan.recv_rows(r), d), dtype=np.float32)
+        for e in range(cfg.e_loc):
+            rows_e = plan.expert_rows(r, e)
+            if rows_e == 0:
+                continue
+            lo = plan.expert_offset(r, e)
+            h_r[lo:lo + rows_e] = x_recv[r][lo:lo + rows_e] @ w1[r, e]
+            g_r[lo:lo + rows_e] = swiglu_np(h_r[lo:lo + rows_e])
+            y_r[lo:lo + rows_e] = g_r[lo:lo + rows_e] @ w2[r, e]
+        h.append(h_r)
+        g.append(g_r)
+        y.append(y_r)
+    y_ret = _combine_np(plan, y, d)
+    return {"x_recv": x_recv, "h": h, "g": g, "y": y, "y_ret": y_ret}
+
+
+def reference_backward_plan(cfg: ScheduleConfig, fwd: dict, w1, w2, dy):
+    """Manual ragged backward mirroring the executor's per-expert matmuls.
+
+    Returns (dx_ret list, dW1 [ep, e_loc, d, 2f], dW2 [ep, e_loc, f, d]).
+    Bit-identical to the executor at gmm_m_split=1 by construction; use
+    ``reference_backward_plan_jax`` for an independent autodiff oracle.
+    """
+    plan = cfg.routing
+    d, f = cfg.d_model, cfg.d_ff
+    dy_recv = _dispatch_np(plan, dy, d)
+    dW1 = np.zeros_like(w1)
+    dW2 = np.zeros_like(w2)
+    dx_disp = []
+    for r in range(cfg.ep):
+        dx_r = np.zeros((plan.recv_rows(r), d), dtype=np.float32)
+        for e in range(cfg.e_loc):
+            rows_e = plan.expert_rows(r, e)
+            if rows_e == 0:
+                continue
+            lo = plan.expert_offset(r, e)
+            sl = slice(lo, lo + rows_e)
+            dg = dy_recv[r][sl] @ w2[r, e].T
+            dW2[r, e] = fwd["g"][r][sl].T @ dy_recv[r][sl]
+            dh = swiglu_grad_np(dg, fwd["h"][r][sl])
+            dx_r[sl] = dh @ w1[r, e].T
+            dW1[r, e] = fwd["x_recv"][r][sl].T @ dh
+        dx_disp.append(dx_r)
+    dx_ret = _combine_np(plan, dx_disp, d)
+    return dx_ret, dW1, dW2
+
+
+def reference_backward_plan_jax(cfg: ScheduleConfig, x_src, w1, w2, dy):
+    """Independent oracle: jax.vjp over the ragged monolithic fragment."""
+    import jax
+    import jax.numpy as jnp
+
+    plan = cfg.routing
+    d, f = cfg.d_model, cfg.d_ff
+
+    def frag(x_src_t, w1, w2):
+        x_recv = []
+        for r in range(cfg.ep):
+            blocks = [x_src_t[s][plan.send_offset(s, r, e):
+                                 plan.send_offset(s, r, e) + c]
+                      for (e, s, c) in plan.recv_layout_cells(r)]
+            x_recv.append(jnp.concatenate(blocks, axis=0) if blocks
+                          else jnp.zeros((0, d), jnp.float32))
+        ys = []
+        for r in range(cfg.ep):
+            parts = []
+            for e in range(cfg.e_loc):
+                rows_e = plan.expert_rows(r, e)
+                if rows_e == 0:
+                    continue
+                lo = plan.expert_offset(r, e)
+                h = x_recv[r][lo:lo + rows_e] @ w1[r, e]
+                a, b = h[:, :f], h[:, f:]
+                g = jax.nn.silu(a) * b
+                parts.append(g @ w2[r, e])
+            ys.append(jnp.concatenate(parts, axis=0) if parts
+                      else jnp.zeros((0, d), jnp.float32))
+        y_ret = []
+        for s in range(cfg.ep):
+            blocks = [ys[dd][plan.recv_offset(dd, e, s):
+                             plan.recv_offset(dd, e, s) + c]
+                      for (dd, e, c) in plan.send_cells(s)]
+            y_ret.append(jnp.concatenate(blocks, axis=0) if blocks
+                         else jnp.zeros((0, d), jnp.float32))
+        return tuple(y_ret)
+
+    _, vjp = jax.vjp(frag, tuple(jnp.asarray(x) for x in x_src),
+                     jnp.asarray(w1), jnp.asarray(w2))
+    dx, dw1, dw2 = vjp(tuple(jnp.asarray(g) for g in dy))
+    return [np.asarray(x) for x in dx], np.asarray(dw1), np.asarray(dw2)
+
+
+def load_forward_state_plan(cfg: ScheduleConfig, st: ExecutorState,
+                            x_src, w1, w2) -> None:
+    for r in range(cfg.ep):
+        st.set_buffer("x_src", r, x_src[r])
+        st.set_weight("W1", r, w1[r])
+        st.set_weight("W2", r, w2[r])
+
+
+def load_backward_state_plan(cfg: ScheduleConfig, st: ExecutorState,
+                             fwd: dict, w1, w2, dy) -> None:
     for r in range(cfg.ep):
         st.set_buffer("dy_src", r, dy[r])
         st.set_weight("W1", r, w1[r])

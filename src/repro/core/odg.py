@@ -10,16 +10,23 @@ expressed through shared :class:`TensorRef` objects. Each node carries a
 * ``split_output_dims`` — along which dimension each output's partition
   keeps propagating downstream (``-1`` = stop propagating);
 * ``task_num_fn`` — how many tile tasks to generate for a given shape /
-  parallel configuration.
+  parallel configuration (plan-aware: counts come from the nonzero cells of
+  the operator's :class:`~repro.core.routing.RoutingPlan`, not a fixed grid).
 
 ``build_moe_ffn_forward`` / ``build_moe_ffn_backward`` construct the exact
-graphs of Fig. 2(a)/(b) for a balanced-routing EP group.
+graphs of Fig. 2(a)/(b) for one EP group. Tensor extents are driven by
+``ScheduleConfig.routing`` — a :class:`RoutingPlan` whose per-(src, dst,
+expert) row counts may be arbitrarily imbalanced (skewed, sparse, hotspot);
+the balanced plan reproduces the paper's controlled Table-3 setting and the
+seed's schedules exactly.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Optional, Sequence
+
+from .routing import RoutingPlan, balanced_plan
 
 # Resource classes (paper: AIC = cube/matrix, AIV = vector/comm/data-movement).
 CUBE = "cube"
@@ -66,11 +73,17 @@ class SplitSpec:
     split_inputs: Optional[tuple[tuple[int, int], ...]]
     # Per output: dimension along which the partition propagates (-1 = stop).
     split_output_dims: tuple[int, ...]
-    # Parallel-config → number of tile tasks.
-    task_num_fn: Callable[["ScheduleConfig"], int]
+    # (config, operator) → number of tile tasks; plan-aware fns use the
+    # operator's rank to count its nonzero routing cells.
+    task_num_fn: Callable[["ScheduleConfig", "OperatorNode"], int]
     # Input indices excluded from split checking (e.g. Combine's offset/size
     # metadata tensors — paper §4.2 example).
     ignore_inputs: tuple[int, ...] = ()
+    # Label outputs row-partitioned even when this op emits ≤1 tasks. Set
+    # for Dispatch: its *receive* buffer is written in exact per-cell ranges
+    # by every source rank's tasks, so downstream tiling is legal no matter
+    # how few cells this particular sender has (hotspot / zero-send ranks).
+    always_label: bool = False
 
 
 @dataclasses.dataclass
@@ -97,9 +110,13 @@ class OperatorNode:
 class ScheduleConfig:
     """Shape + parallel configuration C handed to split propagation.
 
-    Balanced-routing EP fragment: ``rows`` tokens flow from every source rank
-    to every (dst rank, local expert) pair — the controlled setting of the
-    paper's Table 3. ``d_model``/``d_ff`` in elements; dtype_bytes for bf16=2.
+    ``rows`` describes the balanced-routing special case (the controlled
+    setting of the paper's Table 3): every (src rank, dst rank, local expert)
+    triple carries the same token count. Supplying ``plan`` instead drives
+    the whole stack from a per-cell :class:`RoutingPlan` — imbalanced,
+    sparse, or hotspot routing as produced by a real router (see
+    ``models.moe.plan_from_routing``). ``d_model``/``d_ff`` in elements;
+    dtype_bytes for bf16=2.
     """
 
     ep: int                      # EP group size
@@ -109,17 +126,38 @@ class ScheduleConfig:
     d_ff: int
     dtype_bytes: int = 2
     # Extra row-wise splits per expert GMM tile (1 = one tile per expert,
-    # the paper's "tile covers a complete expert width" default).
+    # the paper's "tile covers a complete expert width" default). Under a
+    # plan, each expert block is cut into ≤ gmm_m_split ragged chunks.
     gmm_m_split: int = 1
+    # Imbalanced routing plan; None means the balanced grid from ``rows``.
+    plan: Optional[RoutingPlan] = None
+
+    def __post_init__(self):
+        if self.plan is not None and (self.plan.ep != self.ep
+                                      or self.plan.e_loc != self.e_loc):
+            raise ValueError(
+                f"plan shape ({self.plan.ep}, {self.plan.e_loc}) does not "
+                f"match config (ep={self.ep}, e_loc={self.e_loc})")
+
+    @property
+    def routing(self) -> RoutingPlan:
+        """The routing plan driving all extents (balanced if none given)."""
+        if self.plan is not None:
+            return self.plan
+        return balanced_plan(self.ep, self.e_loc, self.rows)
 
     @property
     def rows_per_expert(self) -> int:
-        """Rows each local expert processes (from all ep source ranks)."""
+        """Balanced-grid rows per local expert (from all ep source ranks).
+
+        Only meaningful without a plan; plan-aware code paths use
+        ``routing.expert_rows(rank, e)`` instead.
+        """
         return self.ep * self.rows
 
     @property
     def recv_rows(self) -> int:
-        """Total rows in a rank's dispatch-receive buffer."""
+        """Balanced-grid rows in a rank's dispatch-receive buffer."""
         return self.e_loc * self.rows_per_expert
 
 
@@ -171,29 +209,32 @@ class ODG:
 # SplitSpecs for the MoE-FFN operators (paper §4.2).
 # ---------------------------------------------------------------------------
 
-def _dispatch_tasks(c: ScheduleConfig) -> int:
-    # One put_mem_signal task per (destination rank, local expert) region.
-    return c.ep * c.e_loc
+def _dispatch_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
+    # One put_mem_signal task per *nonzero* (dst rank, local expert) cell of
+    # this source rank's plan (balanced: ep * e_loc).
+    return c.routing.n_send_cells(op.rank)
 
 
-def _gmm_tasks(c: ScheduleConfig) -> int:
+def _gmm_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
     # Task-level parallelism only along expert blocks (× optional row split);
-    # the K reduction dimension stays intact (§4.2).
-    return c.e_loc * c.gmm_m_split
+    # the K reduction dimension stays intact (§4.2). Empty experts produce
+    # no tiles; ragged blocks produce a ragged last chunk.
+    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split)
 
 
-def _vector_tasks(c: ScheduleConfig) -> int:
+def _vector_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
     # AIV-side elementwise ops align with GMM row partitions.
-    return c.e_loc * c.gmm_m_split
+    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split)
 
 
-def _combine_tasks(c: ScheduleConfig) -> int:
-    # One put_mem_signal task per (source rank, local expert) region.
-    return c.ep * c.e_loc
+def _combine_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
+    # One put_mem_signal task per nonzero (source rank, local expert) cell
+    # returned by this rank (balanced: ep * e_loc).
+    return c.routing.n_combine_cells(op.rank)
 
 
 DISPATCH_SPEC = SplitSpec(split_inputs=None, split_output_dims=(0,),
-                          task_num_fn=_dispatch_tasks)
+                          task_num_fn=_dispatch_tasks, always_label=True)
 GMM_SPEC = SplitSpec(split_inputs=((0, 0),), split_output_dims=(0,),
                      task_num_fn=_gmm_tasks)
 SWIGLU_SPEC = SplitSpec(split_inputs=((0, 0),), split_output_dims=(0,),
@@ -216,14 +257,15 @@ def build_moe_ffn_forward(cfg: ScheduleConfig) -> ODG:
     g = ODG(cfg, "forward")
     db = cfg.dtype_bytes
     d, f = cfg.d_model, cfg.d_ff
+    plan = cfg.routing
 
     for r in range(cfg.ep):
         # Source-side routed tokens, grouped by (dst rank, expert).
-        x_src = g.tensor(f"x_src@{r}", cfg.ep * cfg.e_loc * cfg.rows, d * db,
+        x_src = g.tensor(f"x_src@{r}", plan.send_rows(r), d * db,
                          external=True)
         # Receive buffer, grouped by (expert, src rank) — expert-major so each
         # expert's rows are contiguous for the GMM.
-        x_recv = g.tensor(f"x_recv@{r}", cfg.recv_rows, d * db)
+        x_recv = g.tensor(f"x_recv@{r}", plan.recv_rows(r), d * db)
         g.add_op(OperatorNode(
             name=f"Dispatch@{r}", op_type="dispatch", resource=VECTOR, rank=r,
             inputs=[x_src], outputs=[x_recv], split_spec=DISPATCH_SPEC))
@@ -231,19 +273,20 @@ def build_moe_ffn_forward(cfg: ScheduleConfig) -> ODG:
     for r in range(cfg.ep):
         x_recv = g.tensors[f"x_recv@{r}"]
         w1 = g.tensor(f"W1@{r}", cfg.e_loc, d * 2 * f * db, external=True)
-        h = g.tensor(f"h@{r}", cfg.recv_rows, 2 * f * db)
+        h = g.tensor(f"h@{r}", plan.recv_rows(r), 2 * f * db)
         g.add_op(OperatorNode(
             name=f"GMM1@{r}", op_type="gmm", resource=CUBE, rank=r,
             inputs=[x_recv, w1], outputs=[h], split_spec=GMM_SPEC,
             meta={"which": "gmm1"}))
 
-        act = g.tensor(f"g@{r}", cfg.recv_rows, f * db)
+        act = g.tensor(f"g@{r}", plan.recv_rows(r), f * db)
         g.add_op(OperatorNode(
             name=f"SwiGLU@{r}", op_type="swiglu", resource=VECTOR, rank=r,
-            inputs=[h], outputs=[act], split_spec=SWIGLU_SPEC))
+            inputs=[h], outputs=[act], split_spec=SWIGLU_SPEC,
+            meta={"plan_tiling": "expert"}))
 
         w2 = g.tensor(f"W2@{r}", cfg.e_loc, f * d * db, external=True)
-        y = g.tensor(f"y@{r}", cfg.recv_rows, d * db)
+        y = g.tensor(f"y@{r}", plan.recv_rows(r), d * db)
         g.add_op(OperatorNode(
             name=f"GMM2@{r}", op_type="gmm", resource=CUBE, rank=r,
             inputs=[act, w2], outputs=[y], split_spec=GMM_SPEC,
@@ -253,7 +296,7 @@ def build_moe_ffn_forward(cfg: ScheduleConfig) -> ODG:
         y = g.tensors[f"y@{r}"]
         meta_t = g.tensor(f"route_meta@{r}", cfg.ep * cfg.e_loc, 8,
                           external=True)
-        y_ret = g.tensor(f"y_ret@{r}", cfg.ep * cfg.e_loc * cfg.rows, d * db)
+        y_ret = g.tensor(f"y_ret@{r}", plan.send_rows(r), d * db)
         g.add_op(OperatorNode(
             name=f"Combine@{r}", op_type="combine", resource=VECTOR, rank=r,
             inputs=[y, meta_t], outputs=[y_ret], split_spec=COMBINE_SPEC))
@@ -274,11 +317,12 @@ def build_moe_ffn_backward(cfg: ScheduleConfig) -> ODG:
     g = ODG(cfg, "backward")
     db = cfg.dtype_bytes
     d, f = cfg.d_model, cfg.d_ff
+    plan = cfg.routing
 
     for r in range(cfg.ep):
-        dy_src = g.tensor(f"dy_src@{r}", cfg.ep * cfg.e_loc * cfg.rows,
+        dy_src = g.tensor(f"dy_src@{r}", plan.send_rows(r),
                           d * db, external=True)
-        dy_recv = g.tensor(f"dy_recv@{r}", cfg.recv_rows, d * db)
+        dy_recv = g.tensor(f"dy_recv@{r}", plan.recv_rows(r), d * db)
         g.add_op(OperatorNode(
             name=f"DispatchB@{r}", op_type="dispatch", resource=VECTOR,
             rank=r, inputs=[dy_src], outputs=[dy_recv],
@@ -287,9 +331,9 @@ def build_moe_ffn_backward(cfg: ScheduleConfig) -> ODG:
     for r in range(cfg.ep):
         dy_recv = g.tensors[f"dy_recv@{r}"]
         w2 = g.tensor(f"W2@{r}", cfg.e_loc, f * d * db, external=True)
-        g_saved = g.tensor(f"g_saved@{r}", cfg.recv_rows, f * db,
+        g_saved = g.tensor(f"g_saved@{r}", plan.recv_rows(r), f * db,
                            external=True)
-        dg = g.tensor(f"dg@{r}", cfg.recv_rows, f * db)
+        dg = g.tensor(f"dg@{r}", plan.recv_rows(r), f * db)
         g.add_op(OperatorNode(
             name=f"GMM_act_grad@{r}", op_type="gmm", resource=CUBE, rank=r,
             inputs=[dy_recv, w2], outputs=[dg], split_spec=GMM_SPEC,
@@ -301,21 +345,21 @@ def build_moe_ffn_backward(cfg: ScheduleConfig) -> ODG:
             split_spec=GMM_WGRAD_SPEC,
             meta={"which": "w2_grad", "branch": "dy"}))
 
-        h_saved = g.tensor(f"h_saved@{r}", cfg.recv_rows, 2 * f * db,
+        h_saved = g.tensor(f"h_saved@{r}", plan.recv_rows(r), 2 * f * db,
                            external=True)
-        dh = g.tensor(f"dh@{r}", cfg.recv_rows, 2 * f * db)
+        dh = g.tensor(f"dh@{r}", plan.recv_rows(r), 2 * f * db)
         g.add_op(OperatorNode(
             name=f"SwiGLU_grad@{r}", op_type="swiglu_grad", resource=VECTOR,
             rank=r, inputs=[dg, h_saved], outputs=[dh],
-            split_spec=SWIGLU_SPEC))
+            split_spec=SWIGLU_SPEC, meta={"plan_tiling": "expert"}))
 
         w1 = g.tensor(f"W1@{r}", cfg.e_loc, d * 2 * f * db, external=True)
-        dx_disp = g.tensor(f"dx_disp@{r}", cfg.recv_rows, d * db)
+        dx_disp = g.tensor(f"dx_disp@{r}", plan.recv_rows(r), d * db)
         g.add_op(OperatorNode(
             name=f"GMM_gate_grad@{r}", op_type="gmm", resource=CUBE, rank=r,
             inputs=[dh, w1], outputs=[dx_disp], split_spec=GMM_SPEC,
             meta={"which": "gate_grad", "branch": "dh"}))
-        x_saved = g.tensor(f"x_recv_saved@{r}", cfg.recv_rows, d * db,
+        x_saved = g.tensor(f"x_recv_saved@{r}", plan.recv_rows(r), d * db,
                            external=True)
         dW1 = g.tensor(f"dW1@{r}", cfg.e_loc, d * 2 * f * 4)
         g.add_op(OperatorNode(
@@ -328,8 +372,7 @@ def build_moe_ffn_backward(cfg: ScheduleConfig) -> ODG:
         dx_disp = g.tensors[f"dx_disp@{r}"]
         meta_t = g.tensor(f"route_meta@{r}", cfg.ep * cfg.e_loc, 8,
                           external=True)
-        dx_ret = g.tensor(f"dx_ret@{r}", cfg.ep * cfg.e_loc * cfg.rows,
-                          d * db)
+        dx_ret = g.tensor(f"dx_ret@{r}", plan.send_rows(r), d * db)
         g.add_op(OperatorNode(
             name=f"CombineB@{r}", op_type="combine", resource=VECTOR, rank=r,
             inputs=[dx_disp, meta_t], outputs=[dx_ret],

@@ -15,6 +15,11 @@ legality after reordering.
   dY; gate_grad/w1_grad consume dSwiGLU) are topologically independent.
   Interleaving their tiles by expert shortens the reuse distance of the
   shared activations in L2/VMEM instead of streaming one branch end-to-end.
+
+Both passes operate on ragged tile sets from imbalanced RoutingPlans: RATR
+sorts whatever comm tasks a rank actually emits (empty cells simply don't
+appear in its ring walk), and GMM interleaving keys on (expert, m) metadata
+that survives variable-extent tiling.
 """
 
 from __future__ import annotations

@@ -1,0 +1,259 @@
+"""RoutingPlan — imbalanced routing as a first-class scheduling input.
+
+The paper's controlled Table-3 setting routes the *same* number of tokens
+from every source rank to every (destination rank, local expert) pair, which
+is why the seed reproduction could describe routing with one scalar
+(``ScheduleConfig.rows``). Real MoE batches are skewed: per-expert load
+varies per step, some (src, dst, expert) cells are empty, and hotspot
+traffic concentrates on a few experts. A :class:`RoutingPlan` captures the
+full per-cell row-count matrix plus the derived buffer layouts, so the whole
+compile-and-execute stack (ODG extents, tile generation, dependency
+derivation, executor buffers, simulator costs) can operate on genuinely
+imbalanced traffic. The balanced plan is the trivial special case and
+reproduces the seed's schedules exactly.
+
+Layout conventions (shared by every layer):
+
+* **send buffer** on source rank *s* — rows grouped by (dst rank, local
+  expert), destination-major: block (d, e) starts at ``send_offset(s, d, e)``
+  and holds ``count(s, d, e)`` rows.
+* **recv buffer** on destination rank *d* — rows grouped by (local expert,
+  src rank), expert-major so each expert's rows are contiguous for the GMM:
+  block (e, s) starts at ``recv_offset(d, e, s)``.
+
+Plans are immutable and hashable (SSC-cache friendly); all offsets are
+precomputed once per plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import cached_property
+
+import numpy as np
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingPlan:
+    """Per-(src rank, dst rank, local expert) routed-row counts."""
+
+    # counts[src][dst][local_expert] — nested tuples so the plan is hashable.
+    counts: tuple
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_counts(cls, counts) -> "RoutingPlan":
+        arr = np.asarray(counts, dtype=np.int64)
+        if arr.ndim != 3 or arr.shape[0] != arr.shape[1]:
+            raise ValueError(
+                f"counts must be [ep, ep, e_loc], got shape {arr.shape}")
+        if (arr < 0).any():
+            raise ValueError("routed-row counts must be non-negative")
+        return cls(counts=tuple(
+            tuple(tuple(int(x) for x in dst) for dst in src) for src in arr))
+
+    @classmethod
+    def balanced(cls, ep: int, e_loc: int, rows: int) -> "RoutingPlan":
+        """The paper's controlled setting: every cell carries ``rows``."""
+        return balanced_plan(ep, e_loc, rows)
+
+    # -- basic geometry -----------------------------------------------------
+    @property
+    def ep(self) -> int:
+        return len(self.counts)
+
+    @property
+    def e_loc(self) -> int:
+        return len(self.counts[0][0])
+
+    @cached_property
+    def _c(self) -> np.ndarray:
+        return np.asarray(self.counts, dtype=np.int64)
+
+    @cached_property
+    def _send_off(self) -> np.ndarray:
+        """[src, dst, e] start row within the source send buffer."""
+        flat = self._c.reshape(self.ep, -1)
+        off = np.zeros_like(flat)
+        off[:, 1:] = np.cumsum(flat, axis=1)[:, :-1]
+        out = off.reshape(self._c.shape)
+        # Plans are shared (lru-cached balanced plan); a consumer writing
+        # into the exposed table would corrupt every later compile.
+        out.setflags(write=False)
+        return out
+
+    @cached_property
+    def _recv_off(self) -> np.ndarray:
+        """[dst, e, src] start row within the destination recv buffer."""
+        per_dst = np.ascontiguousarray(np.transpose(self._c, (1, 2, 0)))
+        flat = per_dst.reshape(self.ep, -1)
+        off = np.zeros_like(flat)
+        off[:, 1:] = np.cumsum(flat, axis=1)[:, :-1]
+        out = off.reshape(per_dst.shape)
+        out.setflags(write=False)
+        return out
+
+    # -- row accounting -----------------------------------------------------
+    def count(self, src: int, dst: int, e: int) -> int:
+        return int(self._c[src, dst, e])
+
+    def send_rows(self, src: int) -> int:
+        """Total rows in ``src``'s send (and return) buffer."""
+        return int(self._c[src].sum())
+
+    def recv_rows(self, dst: int) -> int:
+        """Total rows in ``dst``'s dispatch-receive buffer."""
+        return int(self._c[:, dst].sum())
+
+    def expert_rows(self, rank: int, e: int) -> int:
+        """Rows local expert ``e`` on ``rank`` processes (all sources)."""
+        return int(self._c[:, rank, e].sum())
+
+    def expert_offset(self, rank: int, e: int) -> int:
+        """Start row of expert ``e``'s contiguous block in the recv buffer."""
+        return int(self._recv_off[rank, e, 0])
+
+    def send_offset(self, src: int, dst: int, e: int) -> int:
+        return int(self._send_off[src, dst, e])
+
+    def recv_offset(self, dst: int, e: int, src: int) -> int:
+        return int(self._recv_off[dst, e, src])
+
+    @property
+    def send_offsets(self) -> np.ndarray:
+        """Full [src, dst, e] start-row table (for vectorized consumers)."""
+        return self._send_off
+
+    @property
+    def recv_offsets(self) -> np.ndarray:
+        """Full [dst, e, src] start-row table (for vectorized consumers)."""
+        return self._recv_off
+
+    # -- cell enumeration (zero cells are skipped everywhere) ---------------
+    def send_cells(self, src: int) -> list[tuple[int, int, int]]:
+        """Nonzero (dst, e, count), destination-major = send-buffer order."""
+        return [(d, e, int(self._c[src, d, e]))
+                for d in range(self.ep) for e in range(self.e_loc)
+                if self._c[src, d, e] > 0]
+
+    def combine_cells(self, rank: int) -> list[tuple[int, int, int]]:
+        """Nonzero (src, e, count) returned by ``rank``, source-major."""
+        return [(s, e, int(self._c[s, rank, e]))
+                for s in range(self.ep) for e in range(self.e_loc)
+                if self._c[s, rank, e] > 0]
+
+    def recv_layout_cells(self, rank: int) -> list[tuple[int, int, int]]:
+        """Nonzero (e, src, count) in recv-buffer (expert-major) order."""
+        return [(e, s, int(self._c[s, rank, e]))
+                for e in range(self.e_loc) for s in range(self.ep)
+                if self._c[s, rank, e] > 0]
+
+    def n_send_cells(self, src: int) -> int:
+        return int((self._c[src] > 0).sum())
+
+    def n_combine_cells(self, rank: int) -> int:
+        return int((self._c[:, rank] > 0).sum())
+
+    # -- tile generation ----------------------------------------------------
+    def gmm_tiles(self, rank: int,
+                  m_split: int = 1) -> list[tuple[int, int, int, int]]:
+        """(e, m, lo, hi) recv-buffer row ranges for GMM/vector tiles.
+
+        Each nonzero expert block is cut into at most ``m_split`` chunks of
+        ``ceil(rows / m_split)`` rows; the last chunk is ragged, so no rows
+        are ever dropped. Empty experts produce no tiles. For the balanced
+        plan with ``m_split | rows`` this reduces to the seed's even grid.
+        """
+        tiles: list[tuple[int, int, int, int]] = []
+        for e in range(self.e_loc):
+            rows = self.expert_rows(rank, e)
+            if rows == 0:
+                continue
+            base = self.expert_offset(rank, e)
+            chunk = _ceil_div(rows, max(1, m_split))
+            lo, m = 0, 0
+            while lo < rows:
+                hi = min(lo + chunk, rows)
+                tiles.append((e, m, base + lo, base + hi))
+                lo, m = hi, m + 1
+        return tiles
+
+    def n_gmm_tiles(self, rank: int, m_split: int = 1) -> int:
+        return len(self.gmm_tiles(rank, m_split))
+
+    # -- skew diagnostics ---------------------------------------------------
+    @property
+    def total_rows(self) -> int:
+        return int(self._c.sum())
+
+    def is_balanced(self) -> bool:
+        return bool((self._c == self._c.flat[0]).all())
+
+    def expert_imbalance(self) -> float:
+        """max / mean load over all (rank, expert) slots (1.0 = balanced)."""
+        loads = self._c.sum(axis=0).reshape(-1).astype(np.float64)
+        mean = loads.mean()
+        return float(loads.max() / mean) if mean > 0 else 1.0
+
+    def rank_imbalance(self) -> float:
+        """max / mean recv rows over ranks (straggler potential)."""
+        loads = self._c.sum(axis=(0, 2)).astype(np.float64)
+        mean = loads.mean()
+        return float(loads.max() / mean) if mean > 0 else 1.0
+
+
+@functools.lru_cache(maxsize=256)
+def balanced_plan(ep: int, e_loc: int, rows: int) -> RoutingPlan:
+    """Cached trivial plan — ``ScheduleConfig.routing`` hits this per task."""
+    return RoutingPlan.from_counts(np.full((ep, ep, e_loc), rows,
+                                           dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Plan generators for tests and benchmarks.
+# ---------------------------------------------------------------------------
+
+def skewed_plan(ep: int, e_loc: int, rows: int,
+                alpha: float = 1.0) -> RoutingPlan:
+    """Deterministic Zipf-like skew over global experts.
+
+    Every source rank still emits ``ep * e_loc * rows`` rows total (token
+    count is conserved); expert ``g`` receives a share ∝ ``(g+1)^-alpha``.
+    ``alpha=0`` is the balanced plan; larger alpha concentrates load.
+    Shares are apportioned by largest remainder so totals are exact.
+    """
+    n_slots = ep * e_loc
+    total = n_slots * rows
+    w = np.arange(1, n_slots + 1, dtype=np.float64) ** (-alpha)
+    w /= w.sum()
+    ideal = w * total
+    base = np.floor(ideal).astype(np.int64)
+    rem = total - int(base.sum())
+    order = np.argsort(-(ideal - base))
+    base[order[:rem]] += 1
+    counts = np.broadcast_to(base.reshape(ep, e_loc),
+                             (ep, ep, e_loc)).copy()
+    return RoutingPlan.from_counts(counts)
+
+
+def hotspot_plan(ep: int, e_loc: int, rows: int) -> RoutingPlan:
+    """Every source sends all of its tokens to (rank 0, expert 0)."""
+    counts = np.zeros((ep, ep, e_loc), dtype=np.int64)
+    counts[:, 0, 0] = ep * e_loc * rows
+    return RoutingPlan.from_counts(counts)
+
+
+def random_plan(ep: int, e_loc: int, max_rows: int,
+                rng: np.random.Generator,
+                p_zero: float = 0.3) -> RoutingPlan:
+    """Sparse random plan: each cell is 0 w.p. ``p_zero``, else U[1, max]."""
+    counts = rng.integers(1, max_rows + 1, size=(ep, ep, e_loc))
+    counts = np.where(rng.random((ep, ep, e_loc)) < p_zero, 0, counts)
+    if counts.sum() == 0:           # keep at least one routed row
+        counts[0, 0, 0] = max_rows
+    return RoutingPlan.from_counts(counts)

@@ -18,6 +18,11 @@ taskflows augmented with threshold event counters:
    in order and wait on dependent events, so the combined (queue ∪ event)
    order must be deadlock-free. ``validate_schedule`` proves it by symbolic
    execution of the counters.
+
+All three stages are extent-agnostic: dependency derivation works on the
+exact (possibly ragged) tile ranges the plan-driven FillConfigs emit, so
+imbalanced RoutingPlans — variable cell sizes, empty cells, whole ranks
+with zero tasks — compile through the same path as the balanced grid.
 """
 
 from __future__ import annotations

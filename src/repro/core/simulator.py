@@ -40,6 +40,11 @@ class SimResult:
     l2_hits: int
     l2_lookups: int
     timeline: list           # (start, end, rank, pool, op_name)
+    # Skew diagnostics (imbalanced RoutingPlans): how much longer the most
+    # loaded rank's cube stays busy than the average rank's — the straggler
+    # a load-imbalanced MoE batch creates even with perfect overlap.
+    straggler_ratio: float = 1.0     # max / mean per-rank cube busy time
+    critical_rank: int = -1          # rank with the largest cube busy time
 
     @property
     def l2_hit_rate(self) -> float:
@@ -236,10 +241,24 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
     mac_ratio = (cube_busy / (makespan * max(1, n_cube_pools) * hw.num_aic)
                  if makespan else 0.0)
     exposed = _exposed_time(comm_busy_intervals, cube_busy_intervals)
+    # Straggler is over the whole EP group: a rank with zero tasks (fully
+    # starved by the plan) must drag the mean down, not vanish from it.
+    straggler, crit = _straggler(busy, range(s.ep))
     return SimResult(makespan_us=makespan, busy_us=dict(busy),
                      mac_ratio=mac_ratio, exposed_comm_us=exposed,
                      l2_hits=l2_stats[0], l2_lookups=l2_stats[1],
-                     timeline=timeline)
+                     timeline=timeline, straggler_ratio=straggler,
+                     critical_rank=crit)
+
+
+def _straggler(busy: dict, ranks) -> tuple[float, int]:
+    """(max/mean per-rank cube busy, most-loaded rank) over the EP group."""
+    per_rank = {r: busy.get((r, CTQ), 0.0) for r in ranks}
+    if not per_rank:
+        return 1.0, -1
+    mean = sum(per_rank.values()) / len(per_rank)
+    crit = max(per_rank, key=per_rank.get)
+    return (per_rank[crit] / mean if mean > 0 else 1.0), crit
 
 
 def _merge(intervals):
@@ -359,8 +378,10 @@ def simulate_baseline(s: Schedule, hw: AscendA3 = AscendA3()) -> SimResult:
     makespan = now - hw.kernel_launch_us
     cube_busy = sum(v for k, v in busy.items() if k[1] == CTQ)
     mac_ratio = cube_busy / (makespan * len(ranks) * hw.num_aic)
+    straggler, crit = _straggler(busy, range(s.ep))
     return SimResult(makespan_us=makespan, busy_us=dict(busy),
                      mac_ratio=mac_ratio,
                      exposed_comm_us=_exposed_time(comm_iv, cube_iv),
                      l2_hits=l2_stats[0], l2_lookups=l2_stats[1],
-                     timeline=timeline)
+                     timeline=timeline, straggler_ratio=straggler,
+                     critical_rank=crit)

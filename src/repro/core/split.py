@@ -6,6 +6,11 @@ topological order; an operator generates partitioned tile tasks only when
 every required input already carries the expected partition label, and
 otherwise *falls back to one unsplit task* — preserving semantic correctness
 at the cost of parallelism, exactly as the paper specifies.
+
+Task counts are *plan-aware*: a node's ``task_num_fn`` takes (config,
+operator), so the count reflects the nonzero cells of that rank's
+:class:`~repro.core.routing.RoutingPlan` rather than a fixed ``ep × e_loc``
+grid. A rank with no routed rows legally gets zero tasks.
 """
 
 from __future__ import annotations
@@ -29,12 +34,12 @@ def propagate_splits(g: ODG) -> None:
         checked = s.split_inputs
         if checked is None:
             # Partitioning origin (e.g. Dispatch).
-            n = s.task_num_fn(c)
+            n = s.task_num_fn(c, op)
         else:
             required = [(i, d) for (i, d) in checked
                         if i not in s.ignore_inputs]
             if all(op.inputs[i].split_dim == d for (i, d) in required):
-                n = s.task_num_fn(c)
+                n = s.task_num_fn(c, op)
             else:
                 n = 1  # fallback to one unsplit task
 
@@ -42,7 +47,7 @@ def propagate_splits(g: ODG) -> None:
 
         for j, y in enumerate(op.outputs):
             d = s.split_output_dims[j]
-            if n > 1 and d >= 0:
+            if (n > 1 or s.always_label) and d >= 0:
                 y.split_dim = d
                 y.split_num = n          # visible to downstream inputs
             else:

@@ -96,8 +96,12 @@ class SSCCache:
 
     @staticmethod
     def key(cfg: ScheduleConfig, direction: str, **opts) -> tuple:
-        return (cfg.ep, cfg.e_loc, cfg.rows, cfg.d_model, cfg.d_ff,
-                cfg.gmm_m_split, direction, tuple(sorted(opts.items())))
+        # Key on the effective routing (cfg.routing), so an explicit
+        # balanced plan and the equivalent scalar-rows config share one
+        # entry; a fresh imbalanced router output compiles a fresh SSC.
+        return (cfg.ep, cfg.e_loc, cfg.d_model, cfg.d_ff, cfg.dtype_bytes,
+                cfg.gmm_m_split, cfg.routing.counts, direction,
+                tuple(sorted(opts.items())))
 
     def get_or_compile(self, cfg: ScheduleConfig, direction: str,
                        **opts) -> Schedule:

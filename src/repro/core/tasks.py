@@ -10,6 +10,13 @@ Read/write sets use the canonical *(tensor, rank, row range)* addressing of
 true data dependency. Cross-rank communication tasks are sender-side tasks
 (the AIV worker that issues ``put_mem_signal``) whose *writes* land on the
 destination rank, mirroring one-sided remote-write semantics.
+
+All tile extents are *plan-driven*: offsets and row counts come from the
+config's :class:`~repro.core.routing.RoutingPlan`, so cells of an imbalanced
+plan produce variable-extent tiles with exact read/write ranges, empty cells
+produce no tasks at all, and non-divisible row counts produce a ragged last
+tile instead of silently dropping remainder rows. The balanced plan emits
+byte-identical TDs to the seed's fixed-grid arithmetic.
 """
 
 from __future__ import annotations
@@ -94,6 +101,10 @@ def fill_tasks(g: ODG, op: OperatorNode) -> list[TaskDescriptor]:
     if fn is None:
         raise KeyError(f"no FillConfig registered for op_type={op.op_type}")
     tds = fn(g.cfg, op)
+    # Ragged tiling may emit fewer tiles than propagation requested (e.g.
+    # rows < task_num); sync the operator so task_num always matches the
+    # emitted tile set.
+    op.task_num = len(tds)
     for i, td in enumerate(tds):
         td.op_name = op.name
         td.op_type = op.op_type
@@ -111,89 +122,76 @@ def _db(cfg: ScheduleConfig) -> int:
 
 @fill_config("dispatch")
 def _fill_dispatch(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]:
-    """One put_mem_signal per (dst rank, local expert) region.
+    """One put_mem_signal per nonzero (dst rank, local expert) plan cell.
 
     Source layout groups rows by (dst, expert); destination layout groups by
     (expert, src) so that each expert's rows are contiguous for the GMM.
     """
+    plan = cfg.routing
     r = op.rank
     src_t, dst_t = op.inputs[0], op.outputs[0]
-    R = cfg.rows
     row_b = src_t.row_bytes
-    tds = []
     base_src = src_t.name.split("@")[0]
     base_dst = dst_t.name.split("@")[0]
-    if op.task_num == 1:
-        # Fallback: a single unsplit AllToAll-like task. It writes the
-        # (e, src=r) stripes of every destination buffer; dependency ranges
-        # stay exact so downstream consumers still see true readiness.
-        outs = []
-        for d in range(cfg.ep):
-            for e in range(cfg.e_loc):
-                d_lo = (e * cfg.ep + r) * R
-                outs.append(Range(base_dst, d, d_lo, d_lo + R))
-        td = TaskDescriptor(
+    cells = plan.send_cells(r)               # (dst, e, count), dst-major
+    if not cells:
+        return []
+    # Dispatch is a partitioning origin (split_inputs=None), so it never
+    # falls back to one unsplit task: always one exact TD per nonzero cell.
+    tds = []
+    for (d, e, c) in cells:
+        s_lo = plan.send_offset(r, d, e)
+        d_lo = plan.recv_offset(d, e, r)
+        tds.append(TaskDescriptor(
             task_type="put_mem_signal", queue_type=VTQ,
-            inputs=[Range(base_src, r, 0, src_t.rows)],
-            outputs=outs,
-            task_split_value=src_t.rows,
-            comm_bytes=src_t.rows * row_b, src_rank=r, dst_rank=-1,
-            read_bytes=src_t.rows * row_b, write_bytes=src_t.rows * row_b,
-            meta={"fallback": True, "comm_kind": "dispatch"})
-        return [td]
-    for d in range(cfg.ep):
-        for e in range(cfg.e_loc):
-            s_lo = (d * cfg.e_loc + e) * R
-            d_lo = (e * cfg.ep + r) * R
-            tds.append(TaskDescriptor(
-                task_type="put_mem_signal", queue_type=VTQ,
-                inputs=[Range(base_src, r, s_lo, s_lo + R)],
-                outputs=[Range(base_dst, d, d_lo, d_lo + R)],
-                task_split_value=R,
-                comm_bytes=R * row_b, src_rank=r, dst_rank=d,
-                read_bytes=R * row_b, write_bytes=R * row_b,
-                meta={"expert": e, "dst": d, "comm_kind": "dispatch"}))
+            inputs=[Range(base_src, r, s_lo, s_lo + c)],
+            outputs=[Range(base_dst, d, d_lo, d_lo + c)],
+            task_split_value=c,
+            comm_bytes=c * row_b, src_rank=r, dst_rank=d,
+            read_bytes=c * row_b, write_bytes=c * row_b,
+            meta={"expert": e, "dst": d, "comm_kind": "dispatch"}))
     return tds
 
 
 @fill_config("combine")
 def _fill_combine(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]:
-    """One put_mem_signal per (source rank, local expert) return region."""
+    """One put_mem_signal per nonzero (source rank, local expert) cell."""
+    plan = cfg.routing
     r = op.rank
     src_t, ret_t = op.inputs[0], op.outputs[0]
-    R = cfg.rows
     row_b = src_t.row_bytes
     base_src = src_t.name.split("@")[0]
     base_ret = ret_t.name.split("@")[0]
-    if op.task_num == 1:
+    cells = plan.combine_cells(r)            # (src, e, count), src-major
+    if not cells:
+        return []
+    if op.task_num == 1 and len(cells) > 1:
         # Fallback: outputs ordered to match the (e, src)-major input layout
         # so a sequential block copy is numerically correct.
-        outs = []
-        for e in range(cfg.e_loc):
-            for s in range(cfg.ep):
-                ret_lo = (r * cfg.e_loc + e) * R
-                outs.append(Range(base_ret, s, ret_lo, ret_lo + R))
+        outs = [Range(base_ret, s, plan.send_offset(s, r, e),
+                      plan.send_offset(s, r, e) + c)
+                for (e, s, c) in plan.recv_layout_cells(r)]
+        total = plan.recv_rows(r)
         return [TaskDescriptor(
             task_type="put_mem_signal", queue_type=VTQ,
-            inputs=[Range(base_src, r, 0, src_t.rows)],
+            inputs=[Range(base_src, r, 0, total)],
             outputs=outs,
-            task_split_value=src_t.rows,
-            comm_bytes=src_t.rows * row_b, src_rank=r, dst_rank=-1,
-            read_bytes=src_t.rows * row_b, write_bytes=src_t.rows * row_b,
+            task_split_value=total,
+            comm_bytes=total * row_b, src_rank=r, dst_rank=-1,
+            read_bytes=total * row_b, write_bytes=total * row_b,
             meta={"fallback": True, "comm_kind": "combine"})]
     tds = []
-    for s in range(cfg.ep):
-        for e in range(cfg.e_loc):
-            y_lo = (e * cfg.ep + s) * R          # expert-major on this rank
-            ret_lo = (r * cfg.e_loc + e) * R     # (dst=r, expert) on source s
-            tds.append(TaskDescriptor(
-                task_type="put_mem_signal", queue_type=VTQ,
-                inputs=[Range(base_src, r, y_lo, y_lo + R)],
-                outputs=[Range(base_ret, s, ret_lo, ret_lo + R)],
-                task_split_value=R,
-                comm_bytes=R * row_b, src_rank=r, dst_rank=s,
-                read_bytes=R * row_b, write_bytes=R * row_b,
-                meta={"expert": e, "dst": s, "comm_kind": "combine"}))
+    for (s, e, c) in cells:
+        y_lo = plan.recv_offset(r, e, s)     # expert-major on this rank
+        ret_lo = plan.send_offset(s, r, e)   # (dst=r, expert) on source s
+        tds.append(TaskDescriptor(
+            task_type="put_mem_signal", queue_type=VTQ,
+            inputs=[Range(base_src, r, y_lo, y_lo + c)],
+            outputs=[Range(base_ret, s, ret_lo, ret_lo + c)],
+            task_split_value=c,
+            comm_bytes=c * row_b, src_rank=r, dst_rank=s,
+            read_bytes=c * row_b, write_bytes=c * row_b,
+            meta={"expert": e, "dst": s, "comm_kind": "combine"}))
     return tds
 
 
@@ -201,6 +199,7 @@ def _fill_combine(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor]
 
 def _gmm_tiles(cfg: ScheduleConfig, op: OperatorNode,
                task_type: str) -> list[TaskDescriptor]:
+    plan = cfg.routing
     r = op.rank
     in_t, w_t = op.inputs[0], op.inputs[1]
     out_t = op.outputs[0]
@@ -208,9 +207,10 @@ def _gmm_tiles(cfg: ScheduleConfig, op: OperatorNode,
     base_w = w_t.name.split("@")[0]
     base_out = out_t.name.split("@")[0]
     in_row_b, out_row_b = in_t.row_bytes, out_t.row_bytes
-    rpe = cfg.rows_per_expert
 
     if op.task_num == 1:
+        if in_t.rows == 0:
+            return []
         k = in_row_b // _db(cfg)
         n = out_row_b // _db(cfg)
         return [TaskDescriptor(
@@ -222,39 +222,37 @@ def _gmm_tiles(cfg: ScheduleConfig, op: OperatorNode,
             flops=2.0 * in_t.rows * k * n,
             read_bytes=in_t.rows * in_row_b + w_t.rows * w_t.row_bytes,
             write_bytes=out_t.rows * out_row_b,
-            meta={"fallback": True})]
+            meta={"fallback": True, **op.meta})]
 
-    m_split = max(1, op.task_num // cfg.e_loc)
-    chunk = rpe // m_split
     tds = []
-    for e in range(cfg.e_loc):
-        for m in range(m_split):
-            lo = e * rpe + m * chunk
-            hi = lo + chunk
-            k = in_row_b // _db(cfg)
-            n = out_row_b // (_db(cfg) if task_type != "GMMWGrad" else 4)
-            if task_type == "GMMWGrad":
-                # dW[e] = act[e]^T @ grad[e]; "rows" of the weight tensor are
-                # expert blocks; all m-chunks of expert e accumulate into it.
-                out_rng = Range(base_out, r, e, e + 1)
-                flops = 2.0 * chunk * k * (op.inputs[1].row_bytes // _db(cfg))
-                reads = [Range(base_in, r, lo, hi),
-                         Range(op.inputs[1].name.split("@")[0], r, lo, hi)]
-                wbytes = out_t.row_bytes
-            else:
-                out_rng = Range(base_out, r, lo, hi)
-                flops = 2.0 * chunk * k * n
-                reads = [Range(base_in, r, lo, hi),
-                         Range(base_w, r, e, e + 1)]
-                wbytes = chunk * out_row_b
-            tds.append(TaskDescriptor(
-                task_type=task_type, queue_type=CTQ,
-                inputs=reads, outputs=[out_rng],
-                task_split_value=chunk,
-                flops=flops,
-                read_bytes=chunk * in_row_b + w_t.row_bytes,
-                write_bytes=wbytes,
-                meta={"expert": e, "m": m, **op.meta}))
+    # Ragged expert-block tiles: ≤ gmm_m_split chunks per nonzero expert,
+    # last chunk ragged — every routed row is covered exactly once.
+    for (e, m, lo, hi) in plan.gmm_tiles(r, cfg.gmm_m_split):
+        chunk = hi - lo
+        k = in_row_b // _db(cfg)
+        n = out_row_b // (_db(cfg) if task_type != "GMMWGrad" else 4)
+        if task_type == "GMMWGrad":
+            # dW[e] = act[e]^T @ grad[e]; "rows" of the weight tensor are
+            # expert blocks; all m-chunks of expert e accumulate into it.
+            out_rng = Range(base_out, r, e, e + 1)
+            flops = 2.0 * chunk * k * (op.inputs[1].row_bytes // _db(cfg))
+            reads = [Range(base_in, r, lo, hi),
+                     Range(op.inputs[1].name.split("@")[0], r, lo, hi)]
+            wbytes = out_t.row_bytes
+        else:
+            out_rng = Range(base_out, r, lo, hi)
+            flops = 2.0 * chunk * k * n
+            reads = [Range(base_in, r, lo, hi),
+                     Range(base_w, r, e, e + 1)]
+            wbytes = chunk * out_row_b
+        tds.append(TaskDescriptor(
+            task_type=task_type, queue_type=CTQ,
+            inputs=reads, outputs=[out_rng],
+            task_split_value=chunk,
+            flops=flops,
+            read_bytes=chunk * in_row_b + w_t.row_bytes,
+            write_bytes=wbytes,
+            meta={"expert": e, "m": m, **op.meta}))
     return tds
 
 
@@ -280,6 +278,8 @@ def _rowwise_tiles(cfg: ScheduleConfig, op: OperatorNode,
     extra = [t for t in op.inputs[1:]]
 
     if op.task_num == 1:
+        if in_t.rows == 0:
+            return []
         reads = [Range(base_in, r, 0, in_t.rows)] + [
             Range(t.name.split("@")[0], r, 0, t.rows) for t in extra]
         return [TaskDescriptor(
@@ -291,11 +291,27 @@ def _rowwise_tiles(cfg: ScheduleConfig, op: OperatorNode,
             write_bytes=out_t.nbytes,
             meta={"fallback": True})]
 
-    n = op.task_num
-    chunk = in_t.rows // n
+    if op.meta.get("plan_tiling") == "expert":
+        # MoE-graph vector ops tile exactly like the GMMs they feed/follow —
+        # plan-driven expert blocks with ragged m-chunks, so tile boundaries
+        # stay aligned and the single-trigger invariant holds under skew.
+        ranges = [(lo, hi, {"expert": e, "m": m})
+                  for (e, m, lo, hi)
+                  in cfg.routing.gmm_tiles(r, cfg.gmm_m_split)]
+    else:
+        # Generic even row split with a ragged last tile (no row dropped).
+        chunk = -(-in_t.rows // op.task_num)
+        bounds = []
+        lo = 0
+        while lo < in_t.rows:
+            bounds.append((lo, min(lo + chunk, in_t.rows)))
+            lo = bounds[-1][1]
+        n = len(bounds)           # actual tile count (≤ requested)
+        ranges = [(lo, hi, {"expert": i // max(1, n // cfg.e_loc)})
+                  for i, (lo, hi) in enumerate(bounds)]
     tds = []
-    for i in range(n):
-        lo, hi = i * chunk, (i + 1) * chunk
+    for (lo, hi, meta) in ranges:
+        chunk = hi - lo
         reads = [Range(base_in, r, lo, hi)] + [
             Range(t.name.split("@")[0], r, lo, hi) for t in extra]
         tds.append(TaskDescriptor(
@@ -306,7 +322,7 @@ def _rowwise_tiles(cfg: ScheduleConfig, op: OperatorNode,
             read_bytes=chunk * in_t.row_bytes
             + sum(chunk * t.row_bytes for t in extra),
             write_bytes=chunk * out_t.row_bytes,
-            meta={"expert": i // max(1, n // cfg.e_loc)}))
+            meta=meta))
     return tds
 
 

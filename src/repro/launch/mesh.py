@@ -10,18 +10,23 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kw(n: int) -> dict:
+    """axis_types kwarg where supported (jax ≥ 0.5); empty dict otherwise."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {} if at is None else {"axis_types": (at.Auto,) * n}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single pod (256 chips) or 2×16×16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_test_mesh(data: int = 2, model: int = 4):
     """Small mesh for multi-device CPU tests (needs forced host devices)."""
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **_axis_types_kw(2))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -10,6 +10,11 @@ Three execution paths, all numerically equivalent (tests assert it):
   ``baseline`` mode uses a collective AllToAll, the ``hyperparallel`` mode
   the RATR chunked-ppermute schedule mirroring the paper's one-sided tasks.
 
+``plan_from_routing`` bridges this layer to the scheduling stack: it turns a
+batch's actual (imbalanced) top-k assignment into a compilable
+``repro.core.routing.RoutingPlan``, so compiled schedules are verified
+against ``moe_grouped`` on real router output, not just balanced grids.
+
 Routing uses fixed expert capacity so shapes stay static under jit:
 ``capacity = ceil(tokens · top_k / E · capacity_factor)``; overflow tokens
 are dropped (standard practice; the dense ref applies the same mask).
@@ -145,6 +150,138 @@ def _routed(params, xt, mc: MoEConfig, C: int):
     top_p, top_i, slot = make_dispatch(top_p, top_i, xt.shape[0],
                                        mc.e_total, C)
     return top_p, top_i, slot
+
+
+# ---------------------------------------------------------------------------
+# RoutingPlan bridge — real router output → compilable schedule input.
+#
+# This is the seam between the model layer (capacity-based top-k routing)
+# and the scheduling stack (repro.core): the bridge turns a batch's actual
+# (imbalanced) expert assignment into a RoutingPlan plus the row bookkeeping
+# needed to scatter tokens into the plan's send-buffer layout and to apply
+# top-k combine weights to the executor's returned rows. Tokens are split
+# contiguously over EP source ranks, so a token's global order equals
+# (src-major, local order) — exactly the slot order `moe_grouped` produces,
+# which is what makes a compiled schedule comparable bit-for-bit against the
+# grouped reference.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RoutingBridge:
+    """A RoutingPlan plus token↔row maps for one routed batch."""
+
+    plan: "object"              # repro.core.routing.RoutingPlan
+    # Row index into source rank s's send buffer for choice (s, t, k);
+    # -1 where the choice was dropped by capacity.
+    send_row: np.ndarray        # int64 [ep, T_loc, k]
+
+    @property
+    def ep(self) -> int:
+        return self.send_row.shape[0]
+
+
+def _cumcount(keys: np.ndarray) -> np.ndarray:
+    """Occurrence index of each element within its key group, in order.
+
+    Vectorized (stable argsort + group starts): this runs once per routed
+    batch on [T*k] choices, so no per-choice Python loop.
+    """
+    n = keys.shape[0]
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    order = np.argsort(keys, kind="stable")
+    sorted_keys = keys[order]
+    starts = np.r_[0, np.flatnonzero(np.diff(sorted_keys)) + 1]
+    group_start = np.repeat(starts, np.diff(np.r_[starts, n]))
+    rank = np.empty(n, dtype=np.int64)
+    rank[order] = np.arange(n, dtype=np.int64) - group_start
+    return rank
+
+
+def plan_from_routing(top_i, mc: MoEConfig, ep: int,
+                      capacity: Optional[int] = None) -> RoutingBridge:
+    """Turn real router output into a compilable :class:`RoutingBridge`.
+
+    ``top_i``: expert indices [T, k] (tokens split contiguously over ``ep``
+    source ranks; T % ep == 0) or already per-rank [ep, T_loc, k].
+    ``capacity``: per-(global expert) token cap applied in global token
+    order, matching ``make_dispatch``; ``None`` = dropless.
+    """
+    from repro.core.routing import RoutingPlan
+
+    ti = np.asarray(top_i)
+    if ti.ndim == 2:
+        T, k = ti.shape
+        if T % ep:
+            raise ValueError(f"T={T} tokens not divisible by ep={ep}")
+        ti = ti.reshape(ep, T // ep, k)
+    if ti.shape[0] != ep:
+        raise ValueError(f"leading dim {ti.shape[0]} != ep={ep}")
+    _, t_loc, k = ti.shape
+    if mc.e_total % ep:
+        raise ValueError(f"e_total={mc.e_total} not divisible by ep={ep}")
+    e_loc = mc.e_total // ep
+
+    flat = ti.reshape(-1).astype(np.int64)      # global (src-major) order
+    src_idx = np.repeat(np.arange(ep, dtype=np.int64), t_loc * k)
+    d_idx = flat // e_loc
+    e_idx = flat % e_loc
+
+    # Position of each choice within its global expert, in global order —
+    # the same cumulative count `make_dispatch` computes.
+    slot = _cumcount(flat)
+    keep = (slot < capacity) if capacity is not None else np.ones(
+        flat.shape[0], dtype=bool)
+
+    counts = np.zeros((ep, ep, e_loc), dtype=np.int64)
+    np.add.at(counts, (src_idx[keep], d_idx[keep], e_idx[keep]), 1)
+    plan = RoutingPlan.from_counts(counts)
+
+    # Row within the (src, dst, expert) send cell = occurrence index among
+    # the *kept* choices of that cell, in local order.
+    send_row = np.full(flat.shape[0], -1, dtype=np.int64)
+    kept = np.nonzero(keep)[0]
+    cell = (src_idx[kept] * ep + d_idx[kept]) * e_loc + e_idx[kept]
+    send_row[kept] = (plan.send_offsets.reshape(-1)[cell]
+                      + _cumcount(cell))
+    return RoutingBridge(plan=plan,
+                         send_row=send_row.reshape(ep, t_loc, k))
+
+
+def bridge_dispatch(bridge: RoutingBridge, x) -> list:
+    """Scatter tokens [ep, T_loc, d] into per-rank plan send buffers."""
+    x = np.asarray(x, dtype=np.float32)
+    k = bridge.send_row.shape[2]
+    bufs = []
+    for s in range(bridge.ep):
+        buf = np.zeros((bridge.plan.send_rows(s), x.shape[-1]),
+                       dtype=np.float32)
+        rows = bridge.send_row[s].reshape(-1)
+        valid = rows >= 0
+        buf[rows[valid]] = np.repeat(x[s], k, axis=0)[valid]
+        bufs.append(buf)
+    return bufs
+
+
+def bridge_combine(bridge: RoutingBridge, y_ret: list, top_p) -> np.ndarray:
+    """Weight-and-gather executor return buffers back to [ep, T_loc, d].
+
+    Applies the same per-choice accumulation ``moe_grouped`` performs;
+    dropped choices contribute zero.
+    """
+    top_p = np.asarray(top_p, dtype=np.float32).reshape(
+        bridge.send_row.shape)
+    ep, t_loc, k = bridge.send_row.shape
+    d = y_ret[0].shape[-1] if y_ret else 0
+    y = np.zeros((ep, t_loc, d), dtype=np.float32)
+    for s in range(ep):
+        for j in range(k):
+            rows = bridge.send_row[s, :, j]
+            valid = rows >= 0
+            if valid.any():
+                y[s, valid] += (top_p[s, valid, j, None]
+                                * y_ret[s][rows[valid]])
+    return y
 
 
 def moe_grouped(params, x, mc: MoEConfig, act: str = "swiglu",

@@ -52,6 +52,31 @@ def _pair_capacity(t_loc: int, mc: MoEConfig, ep: int,
     return max(8, int(np.ceil(per_slot * cap_factor / 8)) * 8)
 
 
+def plan_from_dispatch(top_i, mc: MoEConfig, ep: int, C: int):
+    """RoutingPlan for the rows ``_dispatch_buffers`` actually materialises.
+
+    ``top_i``: per-source-rank expert choices [ep, T_loc, k]. Capacity here
+    is *per (source device, global expert)* — the slot semantics of
+    ``_dispatch_buffers`` — so ``counts[s, d, e] = min(#choices, C)``. The
+    returned plan describes the useful (non-padding) rows of the EP path's
+    fixed-capacity send buffers, letting the same batch be compiled by the
+    scheduling stack and profiled for skew.
+    """
+    from repro.core.routing import RoutingPlan
+
+    ti = np.asarray(top_i)
+    if ti.ndim != 3 or ti.shape[0] != ep:
+        raise ValueError(f"expected [ep, T_loc, k] choices, got {ti.shape}")
+    if mc.e_total % ep:
+        raise ValueError(f"e_total={mc.e_total} not divisible by ep={ep}")
+    e_loc = mc.e_total // ep
+    counts = np.zeros((ep, ep, e_loc), dtype=np.int64)
+    for s in range(ep):
+        hist = np.bincount(ti[s].reshape(-1), minlength=mc.e_total)
+        counts[s] = np.minimum(hist, C).reshape(ep, e_loc)
+    return RoutingPlan.from_counts(counts)
+
+
 def _expert_ffn_local(w_in, w_down, x, act, use_pallas):
     if use_pallas:
         from repro.kernels.ops import moe_expert_ffn

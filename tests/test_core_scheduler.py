@@ -45,7 +45,7 @@ def test_split_fallback_on_missing_labels():
         inputs=[x], outputs=[y],
         split_spec=SplitSpec(split_inputs=((0, 0),),
                              split_output_dims=(0,),
-                             task_num_fn=lambda c: 8)))
+                             task_num_fn=lambda c, op: 8)))
     propagate_splits(g)
     assert g.ops[0].task_num == 1          # fallback (Algorithm 1 line 12)
 

@@ -1,7 +1,10 @@
 """Hypothesis property tests on the scheduling system's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import executor as ex
 from repro.core.odg import (ScheduleConfig, build_moe_ffn_backward,

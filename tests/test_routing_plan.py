@@ -1,0 +1,193 @@
+"""RoutingPlan unit tests: offsets, ragged tiles, balanced equivalence."""
+
+import numpy as np
+import pytest
+
+from repro.core.odg import (ScheduleConfig, build_moe_ffn_backward,
+                            build_moe_ffn_forward)
+from repro.core.routing import (RoutingPlan, balanced_plan, hotspot_plan,
+                                random_plan, skewed_plan)
+from repro.core.scheduler import compile_schedule
+from repro.core.split import propagate_splits, split_report
+from repro.core.ssc import SSCCache
+from repro.core import executor as ex
+
+
+def test_plan_offsets_round_trip():
+    plan = RoutingPlan.from_counts([[[3, 0], [1, 2]],
+                                    [[0, 5], [2, 0]]])
+    assert plan.ep == 2 and plan.e_loc == 2
+    # send buffer on src 0: (d0,e0)=3, (d0,e1)=0, (d1,e0)=1, (d1,e1)=2
+    assert plan.send_rows(0) == 6
+    assert plan.send_offset(0, 1, 0) == 3
+    assert plan.send_offset(0, 1, 1) == 4
+    # recv buffer on dst 0: e0 gets 3 (src0) + 0 (src1); e1 gets 0 + 5
+    assert plan.recv_rows(0) == 8
+    assert plan.expert_rows(0, 0) == 3
+    assert plan.expert_rows(0, 1) == 5
+    assert plan.recv_offset(0, 1, 1) == 3
+    assert plan.n_send_cells(0) == 3
+    assert plan.n_combine_cells(0) == 2   # cells (s=0,e=0) and (s=1,e=1)
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        RoutingPlan.from_counts(np.ones((2, 3, 1)))
+    with pytest.raises(ValueError):
+        RoutingPlan.from_counts(-np.ones((2, 2, 1)))
+    with pytest.raises(ValueError):
+        ScheduleConfig(ep=3, e_loc=1, rows=0, d_model=8, d_ff=4,
+                       plan=balanced_plan(2, 1, 4))
+
+
+def test_plan_hashable_and_cached():
+    a = balanced_plan(4, 2, 8)
+    b = RoutingPlan.balanced(4, 2, 8)
+    assert a is b                       # lru-cached trivial plan
+    assert hash(a) == hash(RoutingPlan.from_counts(np.full((4, 4, 2), 8)))
+
+
+def test_gmm_tiles_ragged_last_chunk():
+    """Non-divisible expert rows emit a ragged last tile — no rows dropped."""
+    plan = balanced_plan(1, 1, 10)
+    tiles = plan.gmm_tiles(0, 3)        # 10 rows into ≤3 chunks of ceil=4
+    assert tiles == [(0, 0, 0, 4), (0, 1, 4, 8), (0, 2, 8, 10)]
+    # skewed: expert 0 has 7 rows, expert 1 has 2 (fewer rows than m_split)
+    plan = RoutingPlan.from_counts([[[7, 2]]])
+    tiles = plan.gmm_tiles(0, 4)
+    covered = []
+    for (e, m, lo, hi) in tiles:
+        assert hi > lo
+        covered.extend(range(lo, hi))
+    assert covered == list(range(9))    # every row exactly once, in order
+
+
+def test_balanced_plan_reproduces_scalar_rows_schedule():
+    """The trivial plan must compile to the seed's exact taskflow."""
+    scalar = ScheduleConfig(ep=4, e_loc=2, rows=8, d_model=32, d_ff=16)
+    planned = ScheduleConfig(ep=4, e_loc=2, rows=8, d_model=32, d_ff=16,
+                             plan=balanced_plan(4, 2, 8))
+    for builder in (build_moe_ffn_forward, build_moe_ffn_backward):
+        s1 = compile_schedule(builder(scalar), ratr=True)
+        s2 = compile_schedule(builder(planned), ratr=True)
+        assert s1.n_tasks == s2.n_tasks
+        assert s1.queues == s2.queues
+        for a, b in zip(s1.tasks, s2.tasks):
+            assert a.inputs == b.inputs and a.outputs == b.outputs
+            assert a.dependent_event == b.dependent_event
+            assert a.dependent_threshold == b.dependent_threshold
+
+
+def test_balanced_closed_form_ranges():
+    """Balanced dispatch TDs match the seed's fixed-grid arithmetic."""
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=8, d_model=32, d_ff=16)
+    s = compile_schedule(build_moe_ffn_forward(cfg))
+    R = cfg.rows
+    for td in s.tasks:
+        if td.op_name != "Dispatch@1":
+            continue
+        d, e = td.meta["dst"], td.meta["expert"]
+        assert td.inputs[0].lo == (d * cfg.e_loc + e) * R
+        assert td.outputs[0].lo == (e * cfg.ep + 1) * R
+        assert td.outputs[0].rows == R
+
+
+def test_task_counts_skip_empty_cells():
+    counts = np.zeros((2, 2, 2), dtype=np.int64)
+    counts[0, 0, 0] = 5            # src 0 → (rank 0, expert 0) only
+    counts[1, 0, 1] = 3            # src 1 → (rank 0, expert 1) only
+    cfg = ScheduleConfig(ep=2, e_loc=2, rows=0, d_model=8, d_ff=4,
+                         plan=RoutingPlan.from_counts(counts))
+    g = build_moe_ffn_forward(cfg)
+    propagate_splits(g)
+    rep = dict(split_report(g))
+    assert rep["Dispatch@0"] == 1 and rep["Dispatch@1"] == 1
+    s = compile_schedule(g)
+    # rank 1 receives nothing → none of its compute/return ops emit tasks
+    for name in ("GMM1@1", "SwiGLU@1", "GMM2@1", "Combine@1"):
+        assert not any(td.op_name == name for td in s.tasks)
+    assert all(td.inputs[0].rows > 0 for td in s.tasks)
+
+
+def test_gmm_msplit_ragged_regression():
+    """Seed regression: ``chunk = rpe // m_split`` silently dropped the
+    remainder rows of every expert (10 rows / m_split=3 → three 3-row tiles,
+    row 9 never computed). Ragged tiles must cover every row and the
+    executor must match the reference exactly."""
+    # Rank 0's single expert gets all 10 rows from src 0, so the three
+    # ragged m-chunks nest inside one dispatch tile (single-trigger legal).
+    plan = RoutingPlan.from_counts([[[10], [3]],
+                                    [[0], [4]]])
+    cfg = ScheduleConfig(ep=2, e_loc=1, rows=0, d_model=8, d_ff=4,
+                         gmm_m_split=3, plan=plan)
+    s = compile_schedule(build_moe_ffn_forward(cfg))
+    gmm1 = [t for t in s.tasks if t.op_name == "GMM1@0"]
+    assert [t.outputs[0].rows for t in gmm1] == [4, 4, 2]
+    x_src, w1, w2 = ex.make_inputs_plan(cfg, 3)
+    st = ex.ExecutorState(cfg)
+    ex.load_forward_state_plan(cfg, st, x_src, w1, w2)
+    ex.execute(s, st, rng=np.random.default_rng(0))
+    ref = ex.reference_forward_plan(cfg, x_src, w1, w2)
+    # with the seed's floor-division tiling, row 9 of h/g/y stayed zero
+    assert np.abs(st.get("y", 0)[9]).sum() > 0
+    # m-chunked matmuls differ from the reference's one-matmul-per-expert
+    # by float addition order, so exactness (asserted elsewhere at
+    # gmm_m_split=1) relaxes to tight allclose here.
+    for r in range(cfg.ep):
+        np.testing.assert_allclose(st.get("y_ret", r), ref["y_ret"][r],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_rowwise_ragged_regression():
+    """Generic elementwise tiling covers non-divisible rows (seed dropped
+    ``rows % n`` trailing rows)."""
+    from repro.core.odg import ODG, OperatorNode, SplitSpec, VECTOR
+    cfg = ScheduleConfig(ep=1, e_loc=1, rows=10, d_model=4, d_ff=4)
+    g = ODG(cfg, "forward")
+    h = g.tensor("h@0", 10, 16, external=True)
+    mid = g.tensor("g@0", 10, 8)
+    out = g.tensor("out@0", 10, 8)
+    g.add_op(OperatorNode(
+        name="SwiGLU@0", op_type="swiglu", resource=VECTOR, rank=0,
+        inputs=[h], outputs=[mid],
+        split_spec=SplitSpec(split_inputs=None, split_output_dims=(0,),
+                             task_num_fn=lambda c, op: 3)))
+    g.add_op(OperatorNode(
+        name="Add@0", op_type="elementwise", resource=VECTOR, rank=0,
+        inputs=[mid], outputs=[out],
+        split_spec=SplitSpec(split_inputs=((0, 0),), split_output_dims=(0,),
+                             task_num_fn=lambda c, op: 3),
+        meta={"task_type": "Add"}))
+    s = compile_schedule(g)
+    for op_name in ("SwiGLU@0", "Add@0"):
+        tds = [t for t in s.tasks if t.op_name == op_name]
+        covered = sorted((t.outputs[0].lo, t.outputs[0].hi) for t in tds)
+        assert covered[0][0] == 0 and covered[-1][1] == 10
+        for (a, b) in zip(covered, covered[1:]):
+            assert a[1] == b[0]
+
+
+def test_ssc_cache_keys_on_plan():
+    cache = SSCCache()
+    plan_a = skewed_plan(2, 2, 4, 1.0)
+    plan_b = skewed_plan(2, 2, 4, 2.0)
+    cfg_a = ScheduleConfig(ep=2, e_loc=2, rows=0, d_model=8, d_ff=4,
+                           plan=plan_a)
+    cfg_b = ScheduleConfig(ep=2, e_loc=2, rows=0, d_model=8, d_ff=4,
+                           plan=plan_b)
+    cache.get_or_compile(cfg_a, "forward")
+    cache.get_or_compile(cfg_b, "forward")   # different plan → miss
+    cache.get_or_compile(cfg_a, "forward")   # same plan → hit
+    assert cache.misses == 2 and cache.hits == 1
+
+
+def test_plan_skew_metrics():
+    assert balanced_plan(4, 2, 8).is_balanced()
+    assert balanced_plan(4, 2, 8).expert_imbalance() == pytest.approx(1.0)
+    hot = hotspot_plan(4, 2, 8)
+    assert not hot.is_balanced()
+    assert hot.expert_imbalance() == pytest.approx(4 * 2)
+    assert hot.rank_imbalance() == pytest.approx(4)
+    rnd = random_plan(3, 2, 9, np.random.default_rng(0))
+    assert rnd.total_rows == sum(rnd.send_rows(s) for s in range(3))
+    assert rnd.total_rows == sum(rnd.recv_rows(r) for r in range(3))
