@@ -13,7 +13,7 @@ from repro.core.odg import build_moe_ffn_backward, build_moe_ffn_forward
 from repro.core.scheduler import compile_schedule
 from repro.core.simulator import simulate_baseline, simulate_unified
 
-from .common import emit, paper_module_config
+from .common import emit, opt_pipeline, paper_module_config
 
 PAPER = {  # (baseline_ms, ours_ms) from Table 3
     (4, "fwd"): (16.3, 10.2), (4, "bwd"): (27.9, 19.4),
@@ -32,9 +32,8 @@ def run(hw: AscendA3 = AscendA3()) -> dict:
             base_cfg = paper_module_config(ep, m_split_mult=1)
             opt_cfg = paper_module_config(ep, m_split_mult=4)
             s_base = compile_schedule(builder(base_cfg))
-            s_opt = compile_schedule(
-                builder(opt_cfg), ratr=True,
-                gmm_interleave=(direction == "backward"))
+            s_opt = compile_schedule(builder(opt_cfg),
+                                     pipeline=opt_pipeline(direction))
             b = simulate_baseline(s_base, hw)
             u = simulate_unified(s_opt, hw)
             tot_b += b.makespan_us

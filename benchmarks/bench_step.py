@@ -22,7 +22,7 @@ from repro.core.odg import build_moe_ffn_backward, build_moe_ffn_forward
 from repro.core.scheduler import compile_schedule
 from repro.core.simulator import simulate_baseline, simulate_unified
 
-from .common import emit, paper_module_config
+from .common import emit, opt_pipeline, paper_module_config
 
 MOE_FRACTION = 0.24       # MoE-FFN share of the step critical path (Fig 3)
 PAPER_E2E = {4: 1.08, 8: 1.09, 16: 1.08}
@@ -55,7 +55,7 @@ def run(hw: AscendA3 = AscendA3()) -> None:
                 builder(paper_module_config(ep, m_split_mult=1)))
             s_opt = compile_schedule(
                 builder(paper_module_config(ep, m_split_mult=4)),
-                ratr=True, gmm_interleave=(direction == "backward"))
+                pipeline=opt_pipeline(direction))
             tot_b += simulate_baseline(s_base, hw).makespan_us
             tot_u += simulate_unified(s_opt, hw).makespan_us
         # step = other + moe·λ, with moe fraction of the *baseline* step.

@@ -36,7 +36,7 @@ def run(hw: AscendA3 = AscendA3()) -> None:
         ser = simulate_baseline(sched, hw)
         g2 = build_swiglu_add_odg(M, n_tiles)
         inter = simulate_unified(
-            compile_schedule(g2, chain_interleave=True), hw)
+            compile_schedule(g2, pipeline=["chain_interleave"]), hw)
         derived = (f"interleaved={inter.makespan_us:.1f}us "
                    f"speedup={ser.makespan_us / inter.makespan_us:.2f}x "
                    f"l2_hit_serial={ser.l2_hit_rate:.3f} "

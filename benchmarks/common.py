@@ -28,13 +28,18 @@ def paper_module_config(ep: int, *, m_split_mult: int = 4) -> ScheduleConfig:
                           d_ff=1024, gmm_m_split=ep * m_split_mult)
 
 
-def compiled_pair(ep: int, direction: str, **opts):
+def opt_pipeline(direction: str) -> list:
+    """The paper's §4.5 optimization set as a schedule-pass pipeline."""
+    return (["ratr", "gmm_interleave"] if direction == "backward"
+            else ["ratr"])
+
+
+def compiled_pair(ep: int, direction: str):
     cfg = paper_module_config(ep)
     builder = (build_moe_ffn_forward if direction == "forward"
                else build_moe_ffn_backward)
     base = compile_schedule(builder(paper_module_config(ep, m_split_mult=1)))
-    opt = compile_schedule(builder(cfg), ratr=True,
-                           gmm_interleave=(direction == "backward"))
+    opt = compile_schedule(builder(cfg), pipeline=opt_pipeline(direction))
     return base, opt
 
 

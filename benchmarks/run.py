@@ -33,9 +33,18 @@ SECTIONS = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, metavar="NAME[,NAME...]",
+                    help="comma-separated section names to run "
+                         f"(choices: {','.join(k for k, *_ in SECTIONS)})")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
+    only = None
+    if args.only:
+        only = {name.strip() for name in args.only.split(",") if name.strip()}
+        known = {k for k, *_ in SECTIONS}
+        unknown = only - known
+        if unknown:
+            ap.error(f"unknown section(s) {sorted(unknown)}; "
+                     f"choices: {sorted(known)}")
 
     print(CSV_HEADER)
     failed = []

@@ -23,7 +23,7 @@ from repro.optim import adamw
 # --- 1. compile a schedule ------------------------------------------------
 cfg = ScheduleConfig(ep=4, e_loc=4, rows=64, d_model=512, d_ff=256,
                      gmm_m_split=8)
-sched = compile_schedule(build_moe_ffn_forward(cfg), ratr=True)
+sched = compile_schedule(build_moe_ffn_forward(cfg), pipeline=["ratr"])
 print(f"compiled taskflow: {sched.n_tasks} tile tasks, "
       f"{len(sched.events)} events, "
       f"CTQ[0]={len(sched.queue(0, 'CTQ'))} VTQ[0]={len(sched.queue(0, 'VTQ'))}")

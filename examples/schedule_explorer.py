@@ -30,9 +30,9 @@ def main():
     args = ap.parse_args()
 
     cfg = paper_module_config(args.ep, m_split_mult=4)
-    fwd = compile_schedule(build_moe_ffn_forward(cfg), ratr=True)
-    bwd = compile_schedule(build_moe_ffn_backward(cfg), ratr=True,
-                           gmm_interleave=True)
+    fwd = compile_schedule(build_moe_ffn_forward(cfg), pipeline=["ratr"])
+    bwd = compile_schedule(build_moe_ffn_backward(cfg),
+                           pipeline=["ratr", "gmm_interleave"])
 
     for name, s in (("forward", fwd), ("backward", bwd)):
         print(f"\n=== {name}: {s.n_tasks} tasks, {len(s.events)} events ===")

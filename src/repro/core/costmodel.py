@@ -1,0 +1,89 @@
+"""Compile-time per-task cost model — one timing formula for the whole stack.
+
+The discrete-event simulator (``core/simulator.py``) and the schedule-pass
+pipeline (``core/passes.py``) both need to price a :class:`TaskDescriptor`:
+the simulator to advance its clocks, the passes to make placement and
+ordering decisions *at compile time* (Hexa-MoE-style: heterogeneity-aware
+cost estimates drive decisions before any simulation runs). Keeping one
+``CostModel`` here is what guarantees the two never disagree — the simulator
+owns the L2 *state* (which tiles are resident) but delegates every duration
+to :meth:`CostModel.task_us`.
+
+The L2-residency term is optional: passes that run before any execution
+order exists have no residency information, so they price tasks with
+``CostModel(l2=False)`` — the HBM-streaming lower bound. The simulator keeps
+``l2=True`` and supplies the hit fraction it observes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+from .hardware import AscendA3
+from .odg import CTQ
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Prices one tile task on its execution unit (excl. queue overhead)."""
+
+    hw: AscendA3 = AscendA3()
+    # Model operand L2 residency. When False, the ``l2_hit_frac`` argument is
+    # ignored and every input streams from HBM — the deterministic estimate
+    # compile-time passes use.
+    l2: bool = True
+
+    def task_us(self, td, l2_hit_frac: float = 0.0) -> float:
+        """Execution time of one TD in microseconds.
+
+        ``l2_hit_frac`` is the row-weighted fraction of the task's inputs
+        resident in L2 (supplied by the simulator's LRU model; 0.0 for
+        compile-time estimates).
+        """
+        hw = self.hw
+        frac = l2_hit_frac if self.l2 else 0.0
+        if td.task_type == "put_mem_signal":
+            if td.dst_rank == td.src_rank:
+                # Rank-local "transfer" is an HBM copy, not link traffic.
+                return td.comm_bytes / (hw.hbm_gbps * 1e3)
+            return td.comm_bytes / (hw.link_gbps * 1e3)  # bytes/(GB/s) → us
+        if td.queue_type == CTQ:
+            # Per-tile GMM efficiency depends on operand L2 residency — the
+            # mechanism cache-guided interleaving exploits (§4.5).
+            eff_util = (hw.aic_eff_hbm
+                        + (hw.aic_eff_l2 - hw.aic_eff_hbm) * frac)
+            eff = hw.aic_tflops_bf16 * 1e12 * eff_util
+            return td.flops / eff * 1e6
+        # Vector task: read bandwidth depends on L2 residency of inputs.
+        rb = td.read_bytes
+        hit_bytes = rb * frac
+        miss_bytes = rb - hit_bytes
+        eff_bytes = (miss_bytes + hit_bytes / hw.l2_read_x_hbm
+                     + td.write_bytes)
+        return eff_bytes / (hw.aiv_gbps * 1e3)
+
+    # -- schedule-level aggregates (compile-time skew diagnostics) -----------
+
+    def rank_cube_us(self, sched) -> dict[int, float]:
+        """Total estimated CTQ (cube) time per rank over the full EP group.
+
+        Every rank of ``sched.ep`` appears, including ranks the plan starved
+        of work — they must drag the mean down, exactly as the simulator's
+        ``straggler_ratio`` counts them.
+        """
+        loads: dict[int, float] = defaultdict(float)
+        for td in sched.tasks:
+            if td.queue_type == CTQ:
+                loads[td.rank] += self.task_us(td)
+        return {r: loads.get(r, 0.0) for r in range(sched.ep)}
+
+    def critical_rank(self, sched) -> tuple[float, int]:
+        """(max/mean cube load, most-loaded rank) — the compile-time analogue
+        of ``SimResult.straggler_ratio``/``critical_rank``."""
+        loads = self.rank_cube_us(sched)
+        if not loads:
+            return 1.0, -1
+        mean = sum(loads.values()) / len(loads)
+        crit = max(loads, key=loads.get)
+        return (loads[crit] / mean if mean > 0 else 1.0), crit

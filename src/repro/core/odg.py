@@ -129,10 +129,20 @@ class ScheduleConfig:
     # the paper's "tile covers a complete expert width" default). Under a
     # plan, each expert block is cut into ≤ gmm_m_split ragged chunks.
     gmm_m_split: int = 1
+    # How gmm_m_split chunk boundaries are placed inside an expert block:
+    # "even" (seed behaviour — equal chunks, only legal when boundaries
+    # happen to align with dispatch cells) or "source_aligned" (boundaries
+    # restricted to source-cell edges, legal for arbitrary imbalanced
+    # plans). See RoutingPlan.gmm_tiles.
+    gmm_split_mode: str = "even"
     # Imbalanced routing plan; None means the balanced grid from ``rows``.
     plan: Optional[RoutingPlan] = None
 
     def __post_init__(self):
+        if self.gmm_split_mode not in ("even", "source_aligned"):
+            raise ValueError(
+                f"gmm_split_mode must be 'even' or 'source_aligned', "
+                f"got {self.gmm_split_mode!r}")
         if self.plan is not None and (self.plan.ep != self.ep
                                       or self.plan.e_loc != self.e_loc):
             raise ValueError(
@@ -219,12 +229,12 @@ def _gmm_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
     # Task-level parallelism only along expert blocks (× optional row split);
     # the K reduction dimension stays intact (§4.2). Empty experts produce
     # no tiles; ragged blocks produce a ragged last chunk.
-    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split)
+    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split, c.gmm_split_mode)
 
 
 def _vector_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
     # AIV-side elementwise ops align with GMM row partitions.
-    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split)
+    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split, c.gmm_split_mode)
 
 
 def _combine_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:

@@ -1,0 +1,205 @@
+"""Schedule-compilation pass pipeline — §4.5's optimizations as compiler
+passes over a shared task abstraction.
+
+The seed reproduction hardcoded each execution-order optimization as a
+boolean kwarg threaded through ``compile_schedule``, ``SSCCache.key`` and
+every caller; adding an optimization meant widening every signature.
+FlowMoE frames this as a *scheduling-pass* problem: each optimization is a
+named, parameterized transform over the compiled ``Schedule``, and a
+:class:`Pipeline` — an ordered, serializable list of pass specs — is the
+single object that travels through compilation, the SSC cache key, the SSC
+blob itself, and the hillclimb variant space.
+
+Contract for a registered pass (the ``SchedulePass`` protocol):
+
+* signature ``fn(sched, cfg, **params)``, mutating ``sched.queues`` in
+  place;
+* it may only permute mutually independent tasks — events, tile ranges and
+  task membership are frozen (``validate_schedule`` re-proves legality
+  after the whole pipeline runs);
+* ``params`` must be msgpack-serializable scalars so the spec round-trips
+  through the SSC blob byte-identically.
+
+Back-compat: the seed's ``ratr=`` / ``gmm_interleave=`` /
+``chain_interleave=`` kwargs are shimmed through
+:func:`pipeline_from_flags`, which maps them onto the equivalent canonical
+pipeline — compiling with the old flags and with the equivalent pipeline
+spec produces byte-identical SSC blobs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol, Union, runtime_checkable
+
+from .odg import ScheduleConfig
+
+
+@runtime_checkable
+class SchedulePass(Protocol):
+    """A registered schedule transform: ``fn(sched, cfg, **params)``."""
+
+    def __call__(self, sched, cfg: ScheduleConfig, **params) -> None: ...
+
+
+_PASS_REGISTRY: dict[str, Callable] = {}
+
+
+def register_pass(name: str):
+    """Register a :class:`SchedulePass` implementation under ``name``."""
+    def deco(fn):
+        if name in _PASS_REGISTRY:
+            raise ValueError(f"schedule pass {name!r} already registered")
+        _PASS_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_pass(name: str) -> Callable:
+    try:
+        return _PASS_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown schedule pass {name!r}; registered passes: "
+                       f"{registered_passes()}") from None
+
+
+def registered_passes() -> tuple[str, ...]:
+    return tuple(sorted(_PASS_REGISTRY))
+
+
+@dataclasses.dataclass(frozen=True)
+class PassSpec:
+    """One named pass plus its (sorted, hashable) parameter overrides."""
+
+    name: str
+    params: tuple = ()          # sorted (key, value) pairs
+
+    @classmethod
+    def of(cls, name: str, **params) -> "PassSpec":
+        get_pass(name)          # fail fast on unknown names
+        return cls(name=name, params=tuple(sorted(params.items())))
+
+    def spec(self) -> list:
+        """msgpack/JSON-friendly form: ``[name, {param: value}]``."""
+        return [self.name, {k: v for k, v in self.params}]
+
+    def run(self, sched, cfg: ScheduleConfig) -> None:
+        get_pass(self.name)(sched, cfg, **dict(self.params))
+
+
+PassLike = Union[str, tuple, list, PassSpec]
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """Ordered, serializable pass list — the `opts` of a compiled Schedule."""
+
+    passes: tuple[PassSpec, ...] = ()
+
+    @classmethod
+    def of(cls, *items: PassLike) -> "Pipeline":
+        """Build from pass names, ``[name, params]`` pairs, or PassSpecs."""
+        specs = []
+        for it in items:
+            if isinstance(it, PassSpec):
+                specs.append(it)
+            elif isinstance(it, str):
+                specs.append(PassSpec.of(it))
+            elif isinstance(it, (tuple, list)) and len(it) == 2:
+                specs.append(PassSpec.of(it[0], **dict(it[1])))
+            else:
+                raise TypeError(f"cannot interpret {it!r} as a pass spec")
+        return cls(passes=tuple(specs))
+
+    @classmethod
+    def from_spec(cls, spec) -> "Pipeline":
+        """Inverse of :meth:`spec` (e.g. from a deserialized SSC blob)."""
+        return cls.of(*spec)
+
+    def spec(self) -> list:
+        return [p.spec() for p in self.passes]
+
+    def key(self) -> tuple:
+        """Hashable identity for SSC-cache keys."""
+        return tuple((p.name, p.params) for p in self.passes)
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(p.name for p in self.passes)
+
+    def run(self, sched, cfg: ScheduleConfig) -> None:
+        for p in self.passes:
+            p.run(sched, cfg)
+
+    def __bool__(self) -> bool:
+        return bool(self.passes)
+
+
+EMPTY_PIPELINE = Pipeline()
+
+
+def pipeline_from_flags(*, ratr: bool = False, gmm_interleave: bool = False,
+                        chain_interleave: bool = False) -> Pipeline:
+    """Map the seed's boolean kwargs onto the canonical equivalent pipeline.
+
+    The order matches the seed's ``apply_reorderings`` application order, so
+    flag-compiled and pipeline-compiled schedules are byte-identical.
+    """
+    names = []
+    if ratr:
+        names.append("ratr")
+    if gmm_interleave:
+        names.append("gmm_interleave")
+    if chain_interleave:
+        names.append("chain_interleave")
+    return Pipeline.of(*names)
+
+
+def resolve_pipeline(pipeline=None, *, ratr: bool = False,
+                     gmm_interleave: bool = False,
+                     chain_interleave: bool = False) -> Pipeline:
+    """Normalize a pipeline argument or legacy boolean flags to a Pipeline."""
+    if pipeline is not None:
+        if ratr or gmm_interleave or chain_interleave:
+            raise ValueError(
+                "pass either pipeline= or the legacy boolean flags, not both")
+        if isinstance(pipeline, Pipeline):
+            return pipeline
+        if isinstance(pipeline, str):      # a single bare pass name
+            return Pipeline.of(pipeline)
+        return Pipeline.of(*pipeline)
+    return pipeline_from_flags(ratr=ratr, gmm_interleave=gmm_interleave,
+                               chain_interleave=chain_interleave)
+
+
+# ---------------------------------------------------------------------------
+# Built-in passes (§4.5 reorderings + the straggler-aware extension).
+# Implementations live in core/reorder.py; these wrappers own registration
+# and any direction gating.
+# ---------------------------------------------------------------------------
+
+@register_pass("ratr")
+def _pass_ratr(sched, cfg: ScheduleConfig) -> None:
+    from .reorder import apply_ratr
+    apply_ratr(sched, cfg)
+
+
+@register_pass("gmm_interleave")
+def _pass_gmm_interleave(sched, cfg: ScheduleConfig) -> None:
+    from .reorder import apply_gmm_interleave
+    if sched.direction == "backward":   # branch pairs only exist backward
+        apply_gmm_interleave(sched, cfg)
+
+
+@register_pass("chain_interleave")
+def _pass_chain_interleave(sched, cfg: ScheduleConfig, *,
+                           lag: int = 50) -> None:
+    from .reorder import apply_chain_interleave
+    apply_chain_interleave(sched, lag=lag)
+
+
+@register_pass("critical_rank_first")
+def _pass_critical_rank_first(sched, cfg: ScheduleConfig, *,
+                              threshold: float = 1.05,
+                              lag: int = 0) -> None:
+    from .reorder import apply_critical_rank_first
+    apply_critical_rank_first(sched, cfg, threshold=threshold, lag=lag)

@@ -1,8 +1,12 @@
-"""Execution-order optimizations over legal topological orders (§4.5).
+"""Reordering pass bodies over legal topological orders (§4.5).
 
-Both passes permute *mutually independent* tasks only — ODG edges, tile
-ranges, and event semantics are untouched, and ``validate_schedule`` re-proves
-legality after reordering.
+This module holds the *implementations* of the queue-reordering schedule
+passes; their registration, naming, and composition live in
+``core/passes.py`` (the pass pipeline ``compile_schedule`` executes between
+task generation and validation). Every function here permutes *mutually
+independent* tasks only — ODG edges, tile ranges, and event semantics are
+untouched, and ``validate_schedule`` re-proves legality after the pipeline
+runs.
 
 * **RATR (rank-aware task reordering)** — rotate each source rank's
   communication-task order so rank *r* starts sending to destination
@@ -16,10 +20,18 @@ legality after reordering.
   Interleaving their tiles by expert shortens the reuse distance of the
   shared activations in L2/VMEM instead of streaming one branch end-to-end.
 
-Both passes operate on ragged tile sets from imbalanced RoutingPlans: RATR
-sorts whatever comm tasks a rank actually emits (empty cells simply don't
-appear in its ring walk), and GMM interleaving keys on (expert, m) metadata
-that survives variable-extent tiling.
+* **Chain interleaving** — place consumer tiles a small lag behind their
+  1:1-aligned producers so the producer tile is still L2-resident (§6.1).
+
+* **Critical-rank-first** — hoist comm tasks that feed the compile-time
+  critical rank (``CostModel.critical_rank``, the static analogue of the
+  simulator's ``straggler_ratio``) to the front of each producer queue's
+  comm blocks, so the straggler's dependencies arrive as early as possible.
+
+All passes operate on ragged tile sets from imbalanced RoutingPlans: comm
+reorderings sort whatever comm tasks a rank actually emits (empty cells
+simply don't appear), and GMM interleaving keys on (expert, m) metadata that
+survives variable-extent tiling.
 """
 
 from __future__ import annotations
@@ -29,56 +41,41 @@ from collections import defaultdict
 from .odg import ScheduleConfig, CTQ, VTQ
 
 
-def apply_reorderings(sched, cfg: ScheduleConfig, *, ratr: bool,
-                      gmm_interleave: bool,
-                      chain_interleave: bool = False) -> None:
-    if ratr:
-        _apply_ratr(sched, cfg)
-    if gmm_interleave and sched.direction == "backward":
-        _apply_gmm_interleave(sched, cfg)
-    if chain_interleave:
-        _apply_chain_interleave(sched)
+def reorder_comm_blocks(sched, q: list[int], sort_key) -> list[int]:
+    """Sort each contiguous same-op block of comm tasks in queue ``q``.
 
+    Comm tasks inside one operator's block are mutually independent (they
+    write disjoint remote ranges), so any permutation is legal; relative
+    order against non-comm tasks and across blocks is preserved. The sort is
+    stable, so passes compose: a later pass's partial key refines, rather
+    than destroys, an earlier pass's order.
+    """
+    new_q: list[int] = []
+    block: list[int] = []
+    block_op = None
 
-def _apply_chain_interleave(sched, lag: int = 50) -> None:
-    """Place consumer tiles a small *lag* behind their aligned producers
-    (§6.1).
+    def flush():
+        nonlocal block, block_op
+        if block:
+            block.sort(key=sort_key)
+            new_q.extend(block)
+            block, block_op = [], None
 
-    For 1:1-aligned elementwise chains the VTQ order becomes
-    [p0 … p_{lag-1}, c0, p_lag, c1, …]: close enough that the producer's
-    tile is still L2-resident when the consumer reads it, but far enough
-    that in-order-fetching workers never block on a not-yet-ready consumer
-    (lag ≈ worker-pool width). Op-major order instead streams the whole
-    intermediate through the cache before any consumer runs."""
-    for key, q in list(sched.queues.items()):
-        by_op: dict[str, list[int]] = {}
-        order: list[str] = []
-        for tid in q:
-            op = sched.tasks[tid].op_name
-            if op not in by_op:
-                order.append(op)
-            by_op.setdefault(op, []).append(tid)
-        if len(order) < 2:
-            continue
-        counts = {len(v) for v in by_op.values()}
-        if len(counts) != 1:
-            continue            # not 1:1 aligned — leave as-is
-        n = counts.pop()
-        streams = [by_op[op] for op in order]
-        k = len(streams)
-        new_q: list[int] = []
-        emitted = [0] * k
-        while len(new_q) < n * k:
-            # Emit from the deepest stream whose predecessor is ≥ lag ahead
-            # (or finished); otherwise advance the head stream.
-            for si in range(k - 1, -1, -1):
-                if emitted[si] >= n:
-                    continue
-                if si == 0 or emitted[si - 1] >= min(n, emitted[si] + lag):
-                    new_q.append(streams[si][emitted[si]])
-                    emitted[si] += 1
-                    break
-        sched.queues[key] = new_q
+    for tid in q:
+        td = sched.tasks[tid]
+        is_comm = (td.task_type == "put_mem_signal" and td.dst_rank >= 0)
+        if is_comm and (block_op in (None, td.op_name)):
+            block.append(tid)
+            block_op = td.op_name
+        else:
+            flush()
+            if is_comm:
+                block.append(tid)
+                block_op = td.op_name
+            else:
+                new_q.append(tid)
+    flush()
+    return new_q
 
 
 def ratr_order(rank: int, ep: int) -> list[int]:
@@ -86,45 +83,17 @@ def ratr_order(rank: int, ep: int) -> list[int]:
     return [(rank + 1 + i) % ep for i in range(ep)]
 
 
-def _apply_ratr(sched, cfg: ScheduleConfig) -> None:
+def apply_ratr(sched, cfg: ScheduleConfig) -> None:
     for (rank, qtype), q in sched.queues.items():
         if qtype != VTQ:
             continue
         ring_pos = {d: i for i, d in enumerate(ratr_order(rank, cfg.ep))}
-        # Reorder each comm operator's contiguous task block independently so
-        # relative order against non-comm VTQ tasks is preserved.
-        new_q: list[int] = []
-        block: list[int] = []
-        block_op = None
-
-        def flush():
-            nonlocal block, block_op
-            if block:
-                block.sort(key=lambda tid: (
-                    ring_pos[sched.tasks[tid].dst_rank],
-                    sched.tasks[tid].meta.get("expert", 0)))
-                new_q.extend(block)
-                block, block_op = [], None
-
-        for tid in q:
-            td = sched.tasks[tid]
-            is_comm = (td.task_type == "put_mem_signal"
-                       and td.dst_rank >= 0)
-            if is_comm and (block_op in (None, td.op_name)):
-                block.append(tid)
-                block_op = td.op_name
-            else:
-                flush()
-                if is_comm:
-                    block.append(tid)
-                    block_op = td.op_name
-                else:
-                    new_q.append(tid)
-        flush()
-        sched.queues[(rank, qtype)] = new_q
+        sched.queues[(rank, qtype)] = reorder_comm_blocks(
+            sched, q, lambda tid: (ring_pos[sched.tasks[tid].dst_rank],
+                                   sched.tasks[tid].meta.get("expert", 0)))
 
 
-def _apply_gmm_interleave(sched, cfg: ScheduleConfig) -> None:
+def apply_gmm_interleave(sched, cfg: ScheduleConfig) -> None:
     """Interleave independent backward GMM branch pairs by expert."""
     for (rank, qtype), q in sched.queues.items():
         if qtype != CTQ:
@@ -156,3 +125,126 @@ def _apply_gmm_interleave(sched, cfg: ScheduleConfig) -> None:
                 ops.index(sched.tasks[tid].op_name)))
             new_q.extend(keyed)
         sched.queues[(rank, qtype)] = new_q
+
+
+def _interleave_aligned_queue(sched, key, lag: int) -> bool:
+    """Lag-interleave one queue's op streams if they are 1:1 aligned.
+
+    Produces [p0 … p_{lag-1}, c0, p_lag, c1, …] per op pair: each consumer
+    tile sits ``lag`` entries behind its producer. Returns False (queue
+    untouched) when the queue has < 2 ops or its op streams differ in
+    length.
+    """
+    q = sched.queues.get(key, [])
+    by_op: dict[str, list[int]] = {}
+    order: list[str] = []
+    for tid in q:
+        op = sched.tasks[tid].op_name
+        if op not in by_op:
+            order.append(op)
+        by_op.setdefault(op, []).append(tid)
+    if len(order) < 2:
+        return False
+    counts = {len(v) for v in by_op.values()}
+    if len(counts) != 1:
+        return False            # not 1:1 aligned — leave as-is
+    n = counts.pop()
+    streams = [by_op[op] for op in order]
+    k = len(streams)
+    new_q: list[int] = []
+    emitted = [0] * k
+    while len(new_q) < n * k:
+        # Emit from the deepest stream whose predecessor is ≥ lag ahead
+        # (or finished); otherwise advance the head stream.
+        for si in range(k - 1, -1, -1):
+            if emitted[si] >= n:
+                continue
+            if si == 0 or emitted[si - 1] >= min(n, emitted[si] + lag):
+                new_q.append(streams[si][emitted[si]])
+                emitted[si] += 1
+                break
+    sched.queues[key] = new_q
+    return True
+
+
+def apply_chain_interleave(sched, lag: int = 50) -> None:
+    """Place consumer tiles a small *lag* behind their aligned producers
+    (§6.1).
+
+    For 1:1-aligned elementwise chains the queue order becomes
+    [p0 … p_{lag-1}, c0, p_lag, c1, …]: close enough that the producer's
+    tile is still L2-resident when the consumer reads it, but far enough
+    that in-order-fetching workers never block on a not-yet-ready consumer
+    (lag ≈ worker-pool width). Op-major order instead streams the whole
+    intermediate through the cache before any consumer runs."""
+    for key in list(sched.queues):
+        _interleave_aligned_queue(sched, key, lag)
+
+
+def apply_critical_rank_first(sched, cfg: ScheduleConfig, *,
+                              threshold: float = 1.05,
+                              lag: int = 0) -> None:
+    """Prioritize the compile-time critical rank (§4.5 extension).
+
+    The cost model prices every CTQ tile at compile time; when the
+    most-loaded rank's cube time exceeds ``threshold`` × the EP-group mean,
+    two reorderings fire:
+
+    1. *Dependency-feeding hoist* — each rank's VTQ comm blocks are stably
+       re-sorted so transfers destined to the critical rank go first: on
+       producer peers this feeds the straggler's dependency events as early
+       as the links allow, and on the critical rank itself its rank-local
+       dispatch copy moves ahead of sends to non-critical peers. Composes
+       with RATR: a stable partition keeps the anti-hotspot ring order
+       among non-critical destinations.
+
+    2. *Starved-chain interleave* — when the critical rank's cube work is
+       concentrated in one dominant expert (the remaining CTQ tiles cannot
+       even fill the AIC pool), op-major order leaves its workers parked on
+       the dominant chain while downstream tiles sit deep in the queue.
+       If the rank's CTQ is a 1:1-aligned op chain, interleave it with a
+       lag of twice the AIC pool width — deep enough that by the time an
+       in-order worker fetches a consumer tile, its producer (2×pool
+       entries ahead) has usually retired, so the interleave never parks
+       workers that op-major order would have kept busy (on chains shorter
+       than the lag it degenerates to op-major — a no-op). With enough
+       sibling-expert work to keep the pool busy the interleave is skipped
+       entirely — parking workers on not-yet-ready consumers would then
+       *cost* throughput.
+    """
+    from .costmodel import CostModel
+    cost = CostModel(l2=False)
+    ratio, crit = cost.critical_rank(sched)
+    if crit < 0 or ratio <= threshold:
+        return
+    for (rank, qtype), q in sched.queues.items():
+        if qtype != VTQ:
+            continue
+        sched.queues[(rank, qtype)] = reorder_comm_blocks(
+            sched, q,
+            lambda tid: 0 if sched.tasks[tid].dst_rank == crit else 1)
+
+    ctq = sched.queues.get((crit, CTQ))
+    if not ctq:
+        return
+    # Dominant-expert concentration: tiles outside the costliest expert.
+    by_expert: dict[int, float] = defaultdict(float)
+    for tid in ctq:
+        td = sched.tasks[tid]
+        by_expert[td.meta.get("expert", -1)] += cost.task_us(td)
+    dominant = max(by_expert, key=by_expert.get)
+    other_tiles = sum(1 for tid in ctq
+                      if sched.tasks[tid].meta.get("expert", -1) != dominant)
+    if other_tiles >= cost.hw.num_aic:
+        return
+    _interleave_aligned_queue(sched, (crit, CTQ),
+                              lag=lag or 2 * cost.hw.num_aic)
+
+
+def apply_reorderings(sched, cfg: ScheduleConfig, *, ratr: bool,
+                      gmm_interleave: bool,
+                      chain_interleave: bool = False) -> None:
+    """Back-compat shim for the pre-pipeline boolean-flag API."""
+    from .passes import pipeline_from_flags
+    pipeline_from_flags(ratr=ratr, gmm_interleave=gmm_interleave,
+                        chain_interleave=chain_interleave).run(sched, cfg)

@@ -38,6 +38,73 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def _balanced_groups(sizes: list[int], k: int) -> list[int]:
+    """Row counts of ≤ ``k`` contiguous, greedily cost-balanced cell groups.
+
+    Partitions the ordered ``sizes`` sequence into at most ``k`` nonempty
+    contiguous groups, closing a group once it reaches its fair share of the
+    rows still ungrouped (or once only one cell per remaining group is
+    left). Cells are never split, so every group boundary is a legal cut.
+    """
+    k = max(1, min(k, len(sizes)))
+    total = sum(sizes)
+    groups: list[int] = []
+    acc = 0
+    done = 0
+    for i, c in enumerate(sizes):
+        acc += c
+        cells_left = len(sizes) - i - 1
+        groups_left = k - len(groups) - 1
+        if groups_left == 0:
+            continue
+        target = (total - done) / (groups_left + 1)
+        if acc >= target or cells_left <= groups_left:
+            groups.append(acc)
+            done += acc
+            acc = 0
+    if acc:
+        groups.append(acc)
+    return groups
+
+
+def _source_aligned_chunks(cells: list[int], m_split: int) -> list[int]:
+    """Row counts of ≤ ``m_split`` single-trigger-safe chunks of one expert
+    block whose nonzero source cells have ``cells`` rows (src order).
+
+    With ``m_split`` ≤ the cell count, cells are greedily *grouped* into
+    row-balanced chunks (boundaries only on cell edges). With a larger
+    budget, cells are *refined*: each cell gets a piece budget proportional
+    to its size (extra pieces go to the cell with the currently largest
+    piece) and is cut evenly within itself. A chunk is therefore either a
+    union of whole cells or strictly inside one cell — in both cases every
+    dispatch cell feeds exactly one consumer event group.
+    """
+    k = max(1, m_split)
+    if k <= len(cells):
+        return _balanced_groups(cells, k)
+    # Refinement budget: every cell gets one piece, and the k - n spare
+    # pieces go one at a time to the cell with the largest current piece —
+    # sum(pieces) never exceeds k, so the tile budget holds exactly.
+    pieces = [1] * len(cells)
+    spare = k - len(cells)
+    while spare > 0:
+        splittable = [i for i in range(len(cells)) if pieces[i] < cells[i]]
+        if not splittable:
+            break
+        i = max(splittable, key=lambda i: cells[i] / pieces[i])
+        pieces[i] += 1
+        spare -= 1
+    chunks: list[int] = []
+    for c, p in zip(cells, pieces):
+        piece = _ceil_div(c, p)
+        lo = 0
+        while lo < c:
+            hi = min(lo + piece, c)
+            chunks.append(hi - lo)
+            lo = hi
+    return chunks
+
+
 @dataclasses.dataclass(frozen=True)
 class RoutingPlan:
     """Per-(src rank, dst rank, local expert) routed-row counts."""
@@ -160,31 +227,59 @@ class RoutingPlan:
         return int((self._c[:, rank] > 0).sum())
 
     # -- tile generation ----------------------------------------------------
-    def gmm_tiles(self, rank: int,
-                  m_split: int = 1) -> list[tuple[int, int, int, int]]:
+    def gmm_tiles(self, rank: int, m_split: int = 1,
+                  mode: str = "even") -> list[tuple[int, int, int, int]]:
         """(e, m, lo, hi) recv-buffer row ranges for GMM/vector tiles.
 
-        Each nonzero expert block is cut into at most ``m_split`` chunks of
-        ``ceil(rows / m_split)`` rows; the last chunk is ragged, so no rows
-        are ever dropped. Empty experts produce no tiles. For the balanced
-        plan with ``m_split | rows`` this reduces to the seed's even grid.
+        ``mode="even"`` cuts each nonzero expert block into at most
+        ``m_split`` chunks of ``ceil(rows / m_split)`` rows; the last chunk
+        is ragged, so no rows are ever dropped. Empty experts produce no
+        tiles. For the balanced plan with ``m_split | rows`` this reduces to
+        the seed's even grid — but on an arbitrary imbalanced plan the even
+        boundaries straddle dispatch-cell boundaries and the scheduler
+        rejects the schedule (single-trigger violation).
+
+        ``mode="source_aligned"`` respects the source-cell structure of the
+        src-major recv layout: with ``m_split`` at or below the number of
+        nonzero cells, cells are greedily grouped into ≤ ``m_split``
+        row-balanced chunks whose boundaries lie only on source-cell edges
+        — every tile is a union of whole dispatch cells. With a larger
+        budget, oversized cells are additionally refined by even cuts
+        *strictly inside* one cell (budget apportioned by cell size, still
+        ≤ ``m_split`` tiles total). Either way each producer cell overlaps
+        exactly the consumer tiles of a single event group, so the
+        single-trigger invariant holds for *any* plan, however skewed — a
+        hotspot cell carrying most of a rank's tokens gets fine-grained
+        tiles instead of one monolithic chain.
         """
+        if mode not in ("even", "source_aligned"):
+            raise ValueError(f"unknown gmm split mode {mode!r}")
         tiles: list[tuple[int, int, int, int]] = []
         for e in range(self.e_loc):
             rows = self.expert_rows(rank, e)
             if rows == 0:
                 continue
             base = self.expert_offset(rank, e)
-            chunk = _ceil_div(rows, max(1, m_split))
-            lo, m = 0, 0
-            while lo < rows:
-                hi = min(lo + chunk, rows)
-                tiles.append((e, m, base + lo, base + hi))
-                lo, m = hi, m + 1
+            if mode == "even":
+                chunk = _ceil_div(rows, max(1, m_split))
+                lo, m = 0, 0
+                while lo < rows:
+                    hi = min(lo + chunk, rows)
+                    tiles.append((e, m, base + lo, base + hi))
+                    lo, m = hi, m + 1
+                continue
+            cells = [int(self._c[s, rank, e]) for s in range(self.ep)
+                     if self._c[s, rank, e] > 0]
+            lo = 0
+            for m, group_rows in enumerate(
+                    _source_aligned_chunks(cells, m_split)):
+                tiles.append((e, m, base + lo, base + lo + group_rows))
+                lo += group_rows
         return tiles
 
-    def n_gmm_tiles(self, rank: int, m_split: int = 1) -> int:
-        return len(self.gmm_tiles(rank, m_split))
+    def n_gmm_tiles(self, rank: int, m_split: int = 1,
+                    mode: str = "even") -> int:
+        return len(self.gmm_tiles(rank, m_split, mode))
 
     # -- skew diagnostics ---------------------------------------------------
     @property
@@ -241,10 +336,27 @@ def skewed_plan(ep: int, e_loc: int, rows: int,
     return RoutingPlan.from_counts(counts)
 
 
-def hotspot_plan(ep: int, e_loc: int, rows: int) -> RoutingPlan:
-    """Every source sends all of its tokens to (rank 0, expert 0)."""
+def hotspot_plan(ep: int, e_loc: int, rows: int,
+                 background: int = 0) -> RoutingPlan:
+    """Hot (rank 0, expert 0) cell; token count per source is conserved.
+
+    ``background=0`` (default) is the degenerate hotspot: every source sends
+    *all* of its ``ep * e_loc * rows`` tokens to (rank 0, expert 0).
+    ``background > 0`` keeps roughly that many rows in every other cell —
+    source rank *s* keeps ``background + s`` (deterministically varied so
+    the plan is *not* per-source-uniform): the realistic hot-expert profile
+    where all ranks still receive traffic but rank 0 dominates, and where
+    even chunk boundaries straddle source cells — ``gmm_m_split > 1`` then
+    requires source-aligned tiling.
+    """
+    total = ep * e_loc * rows
+    if background and (background + ep - 1) * (ep * e_loc - 1) > total:
+        raise ValueError("background traffic exceeds per-source token count")
     counts = np.zeros((ep, ep, e_loc), dtype=np.int64)
-    counts[:, 0, 0] = ep * e_loc * rows
+    for s in range(ep):
+        if background:
+            counts[s, :, :] = background + s
+        counts[s, 0, 0] = total - counts[s].sum() + counts[s, 0, 0]
     return RoutingPlan.from_counts(counts)
 
 

@@ -16,11 +16,16 @@ taskflows augmented with threshold event counters:
    violation instead of silently emitting an illegal plan.
 3. *Queue construction* — per (rank, CTQ/VTQ) task order; workers consume
    in order and wait on dependent events, so the combined (queue ∪ event)
-   order must be deadlock-free. ``validate_schedule`` proves it by symbolic
-   execution of the counters.
+   order must be deadlock-free.
+4. *Pass pipeline* — an ordered, serializable list of registered schedule
+   passes (``core/passes.py``: RATR, cache-guided GMM interleaving, chain
+   interleaving, critical-rank-first, …) permutes mutually independent
+   queue entries; ``Schedule.opts`` records the pipeline spec, and
+   ``validate_schedule`` then proves the final (queue ∪ event) combination
+   deadlock-free by symbolic execution of the counters.
 
-All three stages are extent-agnostic: dependency derivation works on the
-exact (possibly ragged) tile ranges the plan-driven FillConfigs emit, so
+All stages are extent-agnostic: dependency derivation works on the exact
+(possibly ragged) tile ranges the plan-driven FillConfigs emit, so
 imbalanced RoutingPlans — variable cell sizes, empty cells, whole ranks
 with zero tasks — compile through the same path as the balanced grid.
 """
@@ -128,11 +133,24 @@ def _allocate_events(tasks: list[TaskDescriptor], deps: list[set[int]],
     return events
 
 
-def compile_schedule(g: ODG, *, ratr: bool = False,
+def compile_schedule(g: ODG, *, pipeline=None, ratr: bool = False,
                      gmm_interleave: bool = False,
                      chain_interleave: bool = False,
                      allow_multi_trigger: bool = False) -> Schedule:
-    """ODG → validated per-rank CTQ/VTQ taskflow (the SSC payload)."""
+    """ODG → validated per-rank CTQ/VTQ taskflow (the SSC payload).
+
+    ``pipeline`` names the ordered schedule passes to run between queue
+    construction and validation — a :class:`~repro.core.passes.Pipeline`, a
+    list of pass names, or a serialized spec. The legacy boolean kwargs
+    (``ratr=`` / ``gmm_interleave=`` / ``chain_interleave=``) are shimmed
+    onto the equivalent canonical pipeline and compile byte-identical SSC
+    blobs; they are mutually exclusive with ``pipeline``.
+    """
+    from .passes import resolve_pipeline
+    pipe = resolve_pipeline(pipeline, ratr=ratr,
+                            gmm_interleave=gmm_interleave,
+                            chain_interleave=chain_interleave)
+
     propagate_splits(g)
 
     tasks: list[TaskDescriptor] = []
@@ -152,14 +170,9 @@ def compile_schedule(g: ODG, *, ratr: bool = False,
 
     sched = Schedule(direction=g.direction, ep=g.cfg.ep, tasks=tasks,
                      events=events, queues=dict(queues),
-                     opts={"ratr": ratr, "gmm_interleave": gmm_interleave,
-                           "chain_interleave": chain_interleave})
+                     opts={"pipeline": pipe.spec()})
 
-    if ratr or gmm_interleave or chain_interleave:
-        from .reorder import apply_reorderings
-        apply_reorderings(sched, g.cfg, ratr=ratr,
-                          gmm_interleave=gmm_interleave,
-                          chain_interleave=chain_interleave)
+    pipe.run(sched, g.cfg)
 
     validate_schedule(sched)
     return sched

@@ -25,6 +25,7 @@ import dataclasses
 import heapq
 from collections import OrderedDict, defaultdict
 
+from .costmodel import CostModel
 from .hardware import AscendA3
 from .odg import CTQ, VTQ
 from .scheduler import Schedule, ScheduleError
@@ -75,14 +76,17 @@ class _L2:
         return False
 
 
-def _task_duration_us(td: TaskDescriptor, hw: AscendA3, l2: _L2,
+def _task_duration_us(td: TaskDescriptor, cost: CostModel, l2: _L2,
                       count_l2) -> float:
-    """Execution time of one tile task on its unit (excl. queue overhead)."""
+    """Execution time of one tile task on its unit (excl. queue overhead).
+
+    The timing formula itself lives in :class:`CostModel` (shared with the
+    compile-time passes); this wrapper only owns the simulator's L2 *state*
+    — which input tiles hit, what the miss allocates — and hands the
+    resulting hit fraction to the model.
+    """
     if td.task_type == "put_mem_signal":
-        if td.dst_rank == td.src_rank:
-            # Rank-local "transfer" is an HBM copy, not link traffic.
-            return td.comm_bytes / (hw.hbm_gbps * 1e3)
-        return td.comm_bytes / (hw.link_gbps * 1e3)  # bytes / (GB/s) → us
+        return cost.task_us(td)
     total_rows = sum(r.hi - r.lo for r in td.inputs) or 1
     hit_b = miss_b = 0.0
     for rng in td.inputs:
@@ -97,18 +101,7 @@ def _task_duration_us(td: TaskDescriptor, hw: AscendA3, l2: _L2,
             # read-miss allocates in L2 (streams evict older residents).
             l2.touch(key, int(td.read_bytes * rows / total_rows))
     frac = hit_b / max(1.0, hit_b + miss_b)
-    if td.queue_type == CTQ:
-        # Per-tile GMM efficiency depends on operand L2 residency — the
-        # mechanism cache-guided interleaving exploits (§4.5).
-        eff_util = hw.aic_eff_hbm + (hw.aic_eff_l2 - hw.aic_eff_hbm) * frac
-        eff = hw.aic_tflops_bf16 * 1e12 * eff_util
-        return td.flops / eff * 1e6
-    # Vector task: read bandwidth depends on L2 residency of inputs.
-    rb = td.read_bytes
-    hit_bytes = rb * frac
-    miss_bytes = rb - hit_bytes
-    eff_bytes = miss_bytes + hit_bytes / hw.l2_read_x_hbm + td.write_bytes
-    return eff_bytes / (hw.aiv_gbps * 1e3)
+    return cost.task_us(td, frac)
 
 
 def _touch_outputs(td: TaskDescriptor, l2s: dict[int, _L2]) -> None:
@@ -120,18 +113,22 @@ def _touch_outputs(td: TaskDescriptor, l2s: dict[int, _L2]) -> None:
 def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
                      dispatch_overhead_us: float | None = None,
                      serialize_dispatch: bool = False,
-                     workers_per_pool: dict | None = None) -> SimResult:
+                     workers_per_pool: dict | None = None,
+                     cost: CostModel | None = None) -> SimResult:
     """Event-driven simulation of the single-launch unified runtime.
 
     ``serialize_dispatch`` models an *online dynamic* scheduler: task
     dispatch decisions go through one device-side scheduler, so per-task
     overheads serialize on the critical path (§6.2). The static path's
     dispatch is per-worker queue consumption and overlaps freely.
+    ``cost`` overrides the per-task duration model (default: the shared
+    ``CostModel`` on ``hw`` with L2 residency effects on).
     """
+    cost = cost or CostModel(hw=hw)
     oh = (hw.static_dispatch_us if dispatch_overhead_us is None
           else dispatch_overhead_us)
     pools = workers_per_pool or {CTQ: hw.num_aic, VTQ: hw.num_aiv}
-    sched_clock = {r: 0.0 for r in range(1024)}  # per-rank scheduler clock
+    sched_clock: dict[int, float] = defaultdict(float)  # per-rank clock
 
     ranks = sorted({r for (r, _) in s.queues})
     l2s = {r: _L2(hw.l2_bytes) for r in ranks}
@@ -186,7 +183,7 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
 
     def start_task(tid, t):
         td = s.tasks[tid]
-        dur = _task_duration_us(td, hw, l2s[td.rank], count_l2)
+        dur = _task_duration_us(td, cost, l2s[td.rank], count_l2)
         begin = t
         if (td.task_type == "put_mem_signal" and td.dst_rank >= 0
                 and td.dst_rank != td.src_rank):
@@ -290,14 +287,16 @@ def _exposed_time(comm, cube) -> float:
     return exposed
 
 
-def simulate_baseline(s: Schedule, hw: AscendA3 = AscendA3()) -> SimResult:
+def simulate_baseline(s: Schedule, hw: AscendA3 = AscendA3(), *,
+                      cost: CostModel | None = None) -> SimResult:
     """Operator-by-operator execution with collective comm (§2.3 profile).
 
     Ops run as full-device kernels in topological order; AllToAll is a
     host-synchronized collective across the whole EP group; AIC and AIV
     alternate (a kernel owns the device). GMM tiles use the *same* per-tile
-    efficiency as the unified mode.
+    efficiency (the shared ``CostModel``) as the unified mode.
     """
+    cost = cost or CostModel(hw=hw)
     # Group tasks by operator in schedule (≙ topological) order.
     op_order: list[str] = []
     op_tasks: dict[str, list[TaskDescriptor]] = defaultdict(list)
@@ -364,7 +363,7 @@ def simulate_baseline(s: Schedule, hw: AscendA3 = AscendA3()) -> SimResult:
             mine = [td for td in tds if td.rank == r]
             work = 0.0
             for td in mine:
-                dur = _task_duration_us(td, hw, l2s[r], count_l2)
+                dur = _task_duration_us(td, cost, l2s[r], count_l2)
                 work += dur
                 busy[(r, td.queue_type)] += dur
                 _touch_outputs(td, l2s)

@@ -10,7 +10,10 @@ at the cost of parallelism, exactly as the paper specifies.
 Task counts are *plan-aware*: a node's ``task_num_fn`` takes (config,
 operator), so the count reflects the nonzero cells of that rank's
 :class:`~repro.core.routing.RoutingPlan` rather than a fixed ``ep × e_loc``
-grid. A rank with no routed rows legally gets zero tasks.
+grid. A rank with no routed rows legally gets zero tasks. Under
+``gmm_split_mode="source_aligned"`` the counts come from source-cell-aligned
+chunk grouping (``RoutingPlan.gmm_tiles``), which keeps the propagated
+boundaries legal for arbitrarily imbalanced plans.
 """
 
 from __future__ import annotations

@@ -7,19 +7,24 @@ once and reused across training steps; each step supplies only fresh tensor
 pointers and zeroed event-counter state.
 
 We serialize with msgpack (binary, runtime) and expose a JSON debug dump.
-An in-process :class:`SSCCache` keyed by shape bucket mirrors the paper's
-"reuse SSC for stable shapes or shape buckets" behaviour (Table 2).
+The blob records the schedule-pass pipeline spec that produced it
+(``Schedule.opts["pipeline"]``), so a deserialized schedule knows exactly
+which passes shaped its queues. An in-process :class:`SSCCache` keyed by
+shape bucket × pipeline mirrors the paper's "reuse SSC for stable shapes or
+shape buckets" behaviour (Table 2), with LRU eviction bounding it.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
+from collections import OrderedDict
 from typing import Optional
 
 import msgpack
 
 from .odg import ScheduleConfig
+from .passes import resolve_pipeline
 from .scheduler import Event, Schedule
 from .tasks import Range, TaskDescriptor
 
@@ -87,35 +92,69 @@ def dump_json(s: Schedule, path: str) -> None:
 
 
 class SSCCache:
-    """Shape-bucket keyed cache of compiled SSCs (paper §5.1)."""
+    """LRU cache of compiled SSCs keyed by shape bucket + pass pipeline
+    (paper §5.1).
 
-    def __init__(self):
-        self._cache: dict[tuple, bytes] = {}
+    ``max_entries`` bounds the cache — the dropless per-batch-plan direction
+    compiles one SSC per distinct RoutingPlan, so unbounded growth is a
+    production blocker. Least-recently-used blobs are evicted; ``info()``
+    reports occupancy and hit/miss/eviction counters.
+
+    Schedules are requested either with ``pipeline=`` (a Pipeline, a pass
+    name list, or a serialized spec) or with the legacy boolean kwargs
+    (``ratr=`` …); both normalize to the same canonical pipeline and share
+    one cache entry.
+    """
+
+    def __init__(self, max_entries: int = 64):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self._cache: OrderedDict[tuple, bytes] = OrderedDict()
+        self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     @staticmethod
-    def key(cfg: ScheduleConfig, direction: str, **opts) -> tuple:
+    def key(cfg: ScheduleConfig, direction: str, pipeline=None,
+            **opts) -> tuple:
         # Key on the effective routing (cfg.routing), so an explicit
         # balanced plan and the equivalent scalar-rows config share one
         # entry; a fresh imbalanced router output compiles a fresh SSC.
+        pipe = resolve_pipeline(pipeline, **opts)
         return (cfg.ep, cfg.e_loc, cfg.d_model, cfg.d_ff, cfg.dtype_bytes,
-                cfg.gmm_m_split, cfg.routing.counts, direction,
-                tuple(sorted(opts.items())))
+                cfg.gmm_m_split, cfg.gmm_split_mode, cfg.routing.counts,
+                direction, pipe.key())
 
     def get_or_compile(self, cfg: ScheduleConfig, direction: str,
-                       **opts) -> Schedule:
+                       pipeline=None, **opts) -> Schedule:
         from .odg import build_moe_ffn_backward, build_moe_ffn_forward
         from .scheduler import compile_schedule
-        k = self.key(cfg, direction, **opts)
+        pipe = resolve_pipeline(pipeline, **opts)
+        k = self.key(cfg, direction, pipeline=pipe)
         blob = self._cache.get(k)
         if blob is None:
             self.misses += 1
             builder = (build_moe_ffn_forward if direction == "forward"
                        else build_moe_ffn_backward)
-            sched = compile_schedule(builder(cfg), **opts)
+            sched = compile_schedule(builder(cfg), pipeline=pipe)
             blob = schedule_to_ssc(sched)
             self._cache[k] = blob
+            while len(self._cache) > self.max_entries:
+                self._cache.popitem(last=False)
+                self.evictions += 1
         else:
             self.hits += 1
+            self._cache.move_to_end(k)
         return ssc_to_schedule(blob)
+
+    def info(self) -> dict:
+        """Occupancy + counter snapshot (for logs and capacity planning)."""
+        return {
+            "entries": len(self._cache),
+            "max_entries": self.max_entries,
+            "bytes": sum(len(b) for b in self._cache.values()),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }

@@ -225,9 +225,11 @@ def _gmm_tiles(cfg: ScheduleConfig, op: OperatorNode,
             meta={"fallback": True, **op.meta})]
 
     tds = []
-    # Ragged expert-block tiles: ≤ gmm_m_split chunks per nonzero expert,
-    # last chunk ragged — every routed row is covered exactly once.
-    for (e, m, lo, hi) in plan.gmm_tiles(r, cfg.gmm_m_split):
+    # Ragged expert-block tiles: ≤ gmm_m_split chunks per nonzero expert
+    # (even or source-aligned boundaries per cfg.gmm_split_mode), last chunk
+    # ragged — every routed row is covered exactly once.
+    for (e, m, lo, hi) in plan.gmm_tiles(r, cfg.gmm_m_split,
+                                         cfg.gmm_split_mode):
         chunk = hi - lo
         k = in_row_b // _db(cfg)
         n = out_row_b // (_db(cfg) if task_type != "GMMWGrad" else 4)
@@ -297,7 +299,8 @@ def _rowwise_tiles(cfg: ScheduleConfig, op: OperatorNode,
         # stay aligned and the single-trigger invariant holds under skew.
         ranges = [(lo, hi, {"expert": e, "m": m})
                   for (e, m, lo, hi)
-                  in cfg.routing.gmm_tiles(r, cfg.gmm_m_split)]
+                  in cfg.routing.gmm_tiles(r, cfg.gmm_m_split,
+                                           cfg.gmm_split_mode)]
     else:
         # Generic even row split with a ragged last tile (no row dropped).
         chunk = -(-in_t.rows // op.task_num)

@@ -1,0 +1,102 @@
+"""One timing formula for simulator and compile-time passes (CostModel)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.costmodel import CostModel
+from repro.core.hardware import AscendA3
+from repro.core.odg import (CTQ, VTQ, ScheduleConfig, build_moe_ffn_forward)
+from repro.core.routing import skewed_plan
+from repro.core.scheduler import compile_schedule
+from repro.core.simulator import simulate_unified
+from repro.core.tasks import TaskDescriptor
+
+
+def _comm_td(nbytes, src, dst):
+    return TaskDescriptor(task_type="put_mem_signal", queue_type=VTQ,
+                          comm_bytes=nbytes, src_rank=src, dst_rank=dst)
+
+
+def test_comm_cost_local_vs_remote():
+    cm = CostModel()
+    hw = cm.hw
+    local = cm.task_us(_comm_td(1 << 20, 0, 0))
+    remote = cm.task_us(_comm_td(1 << 20, 0, 1))
+    assert local == pytest.approx((1 << 20) / (hw.hbm_gbps * 1e3))
+    assert remote == pytest.approx((1 << 20) / (hw.link_gbps * 1e3))
+    assert local < remote
+
+
+def test_cube_cost_l2_residency_band():
+    cm = CostModel()
+    td = TaskDescriptor(task_type="GMM", queue_type=CTQ, flops=1e9)
+    cold = cm.task_us(td, 0.0)
+    hot = cm.task_us(td, 1.0)
+    hw = cm.hw
+    assert cold == pytest.approx(
+        1e9 / (hw.aic_tflops_bf16 * 1e12 * hw.aic_eff_hbm) * 1e6)
+    assert hot == pytest.approx(
+        1e9 / (hw.aic_tflops_bf16 * 1e12 * hw.aic_eff_l2) * 1e6)
+    assert hot < cold
+
+
+def test_vector_cost_and_l2_off():
+    cm = CostModel()
+    td = TaskDescriptor(task_type="SwiGLU", queue_type=VTQ,
+                        read_bytes=4e6, write_bytes=2e6)
+    hw = cm.hw
+    assert cm.task_us(td, 0.0) == pytest.approx(
+        (4e6 + 2e6) / (hw.aiv_gbps * 1e3))
+    assert cm.task_us(td, 1.0) < cm.task_us(td, 0.0)
+    # l2=False ignores the supplied hit fraction entirely.
+    off = CostModel(l2=False)
+    assert off.task_us(td, 1.0) == off.task_us(td, 0.0)
+
+
+def test_simulator_busy_time_equals_cost_model_sum():
+    """With L2 effects neutralized the simulator's busy accounting must equal
+    the cost model's task sum exactly — proof there is a single timing
+    formula, not two drifting copies."""
+    hw = dataclasses.replace(AscendA3(), aic_eff_l2=AscendA3().aic_eff_hbm,
+                             l2_read_x_hbm=1.0)
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=8, d_model=64, d_ff=32,
+                         gmm_m_split=2)
+    s = compile_schedule(build_moe_ffn_forward(cfg), pipeline=["ratr"])
+    res = simulate_unified(s, hw)
+    cm = CostModel(hw=hw, l2=False)
+    want = {}
+    for td in s.tasks:
+        key = (td.rank, td.queue_type)
+        want[key] = want.get(key, 0.0) + cm.task_us(td)
+    assert set(res.busy_us) == set(want)
+    for key in want:
+        assert res.busy_us[key] == pytest.approx(want[key], rel=1e-9)
+
+
+def test_compile_time_critical_rank_matches_simulator():
+    plan = skewed_plan(4, 4, 64, 1.5)
+    cfg = ScheduleConfig(ep=4, e_loc=4, rows=0, d_model=256, d_ff=128,
+                         plan=plan)
+    s = compile_schedule(build_moe_ffn_forward(cfg), pipeline=["ratr"])
+    ratio, crit = CostModel(l2=False).critical_rank(s)
+    res = simulate_unified(s)
+    assert crit == res.critical_rank
+    assert ratio == pytest.approx(res.straggler_ratio, rel=0.15)
+
+
+def test_rank_cube_us_counts_starved_ranks():
+    """Ranks the plan starves of work still appear (and drag the mean)."""
+    import numpy as np
+    from repro.core.routing import RoutingPlan
+    counts = np.zeros((3, 3, 2), dtype=np.int64)
+    counts[:, 0, 0] = 5                  # ranks 1,2 receive nothing
+    plan = RoutingPlan.from_counts(counts)
+    cfg = ScheduleConfig(ep=3, e_loc=2, rows=0, d_model=16, d_ff=8,
+                         plan=plan)
+    s = compile_schedule(build_moe_ffn_forward(cfg))
+    loads = CostModel(l2=False).rank_cube_us(s)
+    assert set(loads) == {0, 1, 2}
+    assert loads[1] == 0.0 and loads[2] == 0.0
+    ratio, crit = CostModel(l2=False).critical_rank(s)
+    assert crit == 0 and ratio == pytest.approx(3.0)

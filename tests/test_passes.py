@@ -1,0 +1,306 @@
+"""Pass-pipeline compiler tests: spec round-trips, back-compat shims,
+source-aligned skew tiling, critical-rank-first, and the bounded SSC cache."""
+
+import numpy as np
+import pytest
+
+from repro.core import executor as ex
+from repro.core.odg import (ODG, OperatorNode, ScheduleConfig, SplitSpec,
+                            VECTOR, build_moe_ffn_backward,
+                            build_moe_ffn_forward)
+from repro.core.passes import (Pipeline, PassSpec, pipeline_from_flags,
+                               registered_passes, resolve_pipeline)
+from repro.core.routing import (RoutingPlan, hotspot_plan, random_plan,
+                                skewed_plan)
+from repro.core.scheduler import (ScheduleError, compile_schedule,
+                                  execution_order, validate_schedule)
+from repro.core.simulator import simulate_unified
+from repro.core.ssc import SSCCache, schedule_to_ssc, ssc_to_schedule
+
+CFG = ScheduleConfig(ep=4, e_loc=2, rows=8, d_model=32, d_ff=16)
+
+BUILDERS = {"forward": build_moe_ffn_forward,
+            "backward": build_moe_ffn_backward}
+
+
+# ---------------------------------------------------------------------------
+# Pipeline spec plumbing + legacy-flag equivalence.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("direction", ["forward", "backward"])
+@pytest.mark.parametrize("flags,names", [
+    ({"ratr": True}, ["ratr"]),
+    ({"gmm_interleave": True}, ["gmm_interleave"]),
+    ({"chain_interleave": True}, ["chain_interleave"]),
+    ({"ratr": True, "gmm_interleave": True}, ["ratr", "gmm_interleave"]),
+    ({"ratr": True, "gmm_interleave": True, "chain_interleave": True},
+     ["ratr", "gmm_interleave", "chain_interleave"]),
+])
+def test_flags_compile_byte_identical_to_pipeline(direction, flags, names):
+    builder = BUILDERS[direction]
+    blob_flags = schedule_to_ssc(compile_schedule(builder(CFG), **flags))
+    blob_pipe = schedule_to_ssc(compile_schedule(builder(CFG),
+                                                 pipeline=names))
+    assert blob_flags == blob_pipe
+
+
+def test_pipeline_and_flags_mutually_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        compile_schedule(build_moe_ffn_forward(CFG),
+                         pipeline=["ratr"], ratr=True)
+
+
+def test_unknown_pass_rejected():
+    with pytest.raises(KeyError, match="unknown schedule pass"):
+        Pipeline.of("definitely_not_a_pass")
+
+
+def test_builtin_passes_registered():
+    assert set(registered_passes()) >= {"ratr", "gmm_interleave",
+                                        "chain_interleave",
+                                        "critical_rank_first"}
+
+
+def test_ssc_roundtrip_preserves_pipeline_and_queues():
+    pipe = Pipeline.of("ratr", ["critical_rank_first", {"threshold": 1.5}])
+    s = compile_schedule(build_moe_ffn_forward(CFG), pipeline=pipe)
+    s2 = ssc_to_schedule(schedule_to_ssc(s))
+    assert Pipeline.from_spec(s2.opts["pipeline"]) == pipe
+    assert s2.queues == s.queues
+    for a, b in zip(s.tasks, s2.tasks):
+        assert a.inputs == b.inputs and a.outputs == b.outputs
+        assert a.dependent_event == b.dependent_event
+        assert a.trigger_event == b.trigger_event
+
+
+def test_pass_params_travel_through_spec():
+    spec = PassSpec.of("chain_interleave", lag=7)
+    assert spec.spec() == ["chain_interleave", {"lag": 7}]
+    pipe = Pipeline.from_spec([spec.spec()])
+    assert pipe.passes[0] == spec
+    assert pipe.key() == (("chain_interleave", (("lag", 7),)),)
+
+
+def test_resolve_pipeline_normalizes():
+    assert resolve_pipeline(ratr=True) == Pipeline.of("ratr")
+    assert resolve_pipeline(["ratr"]) == pipeline_from_flags(ratr=True)
+    assert not resolve_pipeline()            # empty pipeline is falsy
+
+
+# ---------------------------------------------------------------------------
+# Source-aligned sub-splitting (skew-aware tiling).
+# ---------------------------------------------------------------------------
+
+def _nonuniform_plan():
+    # Per-source-varying cells: even chunk boundaries straddle cells.
+    return hotspot_plan(4, 2, 8, background=2)
+
+
+def test_even_split_rejects_nonuniform_plan():
+    plan = _nonuniform_plan()
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=32, d_ff=16,
+                         gmm_m_split=4, plan=plan)
+    with pytest.raises(ScheduleError, match="single-trigger"):
+        compile_schedule(build_moe_ffn_forward(cfg))
+
+
+@pytest.mark.parametrize("direction", ["forward", "backward"])
+@pytest.mark.parametrize("m_split", [2, 4, 16])
+def test_source_aligned_compiles_nonuniform_plan(direction, m_split):
+    plan = _nonuniform_plan()
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=32, d_ff=16,
+                         gmm_m_split=m_split,
+                         gmm_split_mode="source_aligned", plan=plan)
+    s = compile_schedule(BUILDERS[direction](cfg),
+                         pipeline=["ratr", "critical_rank_first"])
+    validate_schedule(s)
+    order = execution_order(s)
+    assert sorted(order) == list(range(s.n_tasks))
+
+
+def test_source_aligned_tiles_cover_and_respect_cells():
+    plan = _nonuniform_plan()
+    for rank in range(plan.ep):
+        for m_split in (1, 2, 3, 4, 7, 64):
+            tiles = plan.gmm_tiles(rank, m_split, "source_aligned")
+            for e in range(plan.e_loc):
+                rows = plan.expert_rows(rank, e)
+                mine = [(lo, hi) for (te, m, lo, hi) in tiles if te == e]
+                if rows == 0:
+                    assert not mine
+                    continue
+                # Exact cover of the expert block, in order, no overlap.
+                base = plan.expert_offset(rank, e)
+                assert mine[0][0] == base and mine[-1][1] == base + rows
+                for (a, b) in zip(mine, mine[1:]):
+                    assert a[1] == b[0]
+                assert len(mine) <= max(1, m_split)
+                # Each tile is a union of whole cells or inside one cell.
+                edges = [plan.recv_offset(rank, e, s) for s in range(plan.ep)
+                         if plan.count(s, rank, e) > 0]
+                edges.append(base + rows)
+                for lo, hi in mine:
+                    inside = [c for c in edges if lo < c < hi]
+                    if inside:       # spans cell edges → must sit on edges
+                        assert lo in edges and hi in edges
+
+
+def test_source_aligned_reduces_to_grouping_for_small_budget():
+    """m_split ≤ cell count: boundaries only on cell edges (pure grouping)."""
+    plan = _nonuniform_plan()
+    rank = 0
+    cell_edges = {plan.recv_offset(rank, e, s)
+                  for e in range(plan.e_loc) for s in range(plan.ep)
+                  if plan.count(s, rank, e) > 0}
+    cell_edges |= {plan.expert_offset(rank, e) + plan.expert_rows(rank, e)
+                   for e in range(plan.e_loc)}
+    for (e, m, lo, hi) in plan.gmm_tiles(rank, 3, "source_aligned"):
+        assert lo in cell_edges and hi in cell_edges
+
+
+@pytest.mark.parametrize("m_split", [3, 16])
+def test_source_aligned_executor_matches_reference(m_split):
+    plan = _nonuniform_plan()
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=8, d_ff=4,
+                         gmm_m_split=m_split,
+                         gmm_split_mode="source_aligned", plan=plan)
+    s = compile_schedule(build_moe_ffn_forward(cfg),
+                         pipeline=["ratr", "critical_rank_first"])
+    x_src, w1, w2 = ex.make_inputs_plan(cfg, 3)
+    st = ex.ExecutorState(cfg)
+    ex.load_forward_state_plan(cfg, st, x_src, w1, w2)
+    ex.execute(s, st, rng=np.random.default_rng(m_split))
+    ref = ex.reference_forward_plan(cfg, x_src, w1, w2)
+    for r in range(cfg.ep):
+        if plan.send_rows(r):
+            np.testing.assert_allclose(st.get("y_ret", r), ref["y_ret"][r],
+                                       rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Critical-rank-first.
+# ---------------------------------------------------------------------------
+
+def test_critical_rank_first_reduces_hotspot_makespan():
+    plan = hotspot_plan(8, 8, 128)
+    cfg = ScheduleConfig(ep=8, e_loc=8, rows=0, d_model=2048, d_ff=512,
+                         gmm_m_split=64, gmm_split_mode="source_aligned",
+                         plan=plan)
+    base = simulate_unified(compile_schedule(build_moe_ffn_forward(cfg),
+                                             pipeline=["ratr"]))
+    crit = simulate_unified(compile_schedule(
+        build_moe_ffn_forward(cfg),
+        pipeline=["ratr", "critical_rank_first"]))
+    assert crit.makespan_us < base.makespan_us * 0.99
+
+
+def test_critical_rank_first_noop_on_balanced_plan():
+    s1 = compile_schedule(build_moe_ffn_forward(CFG), pipeline=["ratr"])
+    s2 = compile_schedule(build_moe_ffn_forward(CFG),
+                          pipeline=["ratr", "critical_rank_first"])
+    assert s1.queues == s2.queues
+
+
+def test_critical_rank_first_hoists_feeding_comm():
+    plan = skewed_plan(4, 2, 8, 2.0)       # rank 0 heaviest
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=64, d_ff=32,
+                         plan=plan)
+    s = compile_schedule(build_moe_ffn_forward(cfg),
+                         pipeline=["ratr", "critical_rank_first"])
+    from repro.core.costmodel import CostModel
+    _, crit = CostModel(l2=False).critical_rank(s)
+    for r in range(cfg.ep):
+        dsts = [s.tasks[t].dst_rank for t in s.queue(r, "VTQ")
+                if s.tasks[t].op_name.startswith("Dispatch")
+                and s.tasks[t].dst_rank >= 0]
+        to_crit = [i for i, d in enumerate(dsts) if d == crit]
+        # All critical-destined sends precede every other destination.
+        assert to_crit == list(range(len(to_crit)))
+
+
+# ---------------------------------------------------------------------------
+# Every registered pass keeps arbitrary skewed schedules legal.
+# ---------------------------------------------------------------------------
+
+def _plan_grid():
+    rng = np.random.default_rng(7)
+    return [skewed_plan(3, 2, 6, 1.5),
+            random_plan(3, 2, 7, rng, p_zero=0.5),
+            hotspot_plan(3, 2, 4),
+            hotspot_plan(3, 2, 8, background=2)]
+
+
+@pytest.mark.parametrize("direction", ["forward", "backward"])
+def test_registered_passes_keep_schedules_valid(direction):
+    for plan in _plan_grid():
+        cfg = ScheduleConfig(ep=plan.ep, e_loc=plan.e_loc, rows=0,
+                             d_model=16, d_ff=8, gmm_m_split=4,
+                             gmm_split_mode="source_aligned", plan=plan)
+        for name in registered_passes():
+            s = compile_schedule(BUILDERS[direction](cfg), pipeline=[name])
+            validate_schedule(s)
+        s = compile_schedule(BUILDERS[direction](cfg),
+                             pipeline=list(registered_passes()))
+        validate_schedule(s)
+        assert sorted(execution_order(s)) == list(range(s.n_tasks))
+
+
+# ---------------------------------------------------------------------------
+# Bounded SSC cache.
+# ---------------------------------------------------------------------------
+
+def test_ssc_cache_flags_and_pipeline_share_entry():
+    cache = SSCCache()
+    cache.get_or_compile(CFG, "forward", ratr=True)
+    cache.get_or_compile(CFG, "forward", pipeline=["ratr"])
+    cache.get_or_compile(CFG, "forward", pipeline=Pipeline.of("ratr"))
+    assert cache.misses == 1 and cache.hits == 2
+
+
+def test_ssc_cache_lru_eviction_and_info():
+    cache = SSCCache(max_entries=2)
+    cfgs = [ScheduleConfig(ep=2, e_loc=1, rows=r, d_model=8, d_ff=4)
+            for r in (1, 2, 3)]
+    cache.get_or_compile(cfgs[0], "forward")
+    cache.get_or_compile(cfgs[1], "forward")
+    cache.get_or_compile(cfgs[0], "forward")     # refresh 0 → 1 is LRU
+    cache.get_or_compile(cfgs[2], "forward")     # evicts 1
+    assert cache.evictions == 1
+    cache.get_or_compile(cfgs[0], "forward")     # still cached
+    assert cache.hits == 2
+    cache.get_or_compile(cfgs[1], "forward")     # recompiles
+    assert cache.misses == 4
+    info = cache.info()
+    assert info["entries"] == 2 and info["max_entries"] == 2
+    assert info["evictions"] == 2 and info["bytes"] > 0
+
+
+def test_ssc_cache_key_includes_split_mode():
+    plan = _nonuniform_plan()
+    cfg_sa = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=32, d_ff=16,
+                            gmm_m_split=2,
+                            gmm_split_mode="source_aligned", plan=plan)
+    cfg_even = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=32, d_ff=16,
+                              gmm_m_split=2, plan=plan)
+    assert SSCCache.key(cfg_sa, "forward") != SSCCache.key(cfg_even,
+                                                           "forward")
+
+
+# ---------------------------------------------------------------------------
+# Simulator rank-cap regression (satellite).
+# ---------------------------------------------------------------------------
+
+def test_simulator_serialized_dispatch_beyond_rank_1024():
+    """The per-rank scheduler clock must not cap the rank id space."""
+    cfg = ScheduleConfig(ep=1, e_loc=1, rows=16, d_model=8, d_ff=4)
+    g = ODG(cfg, "forward")
+    h = g.tensor("h@1500", 16, 32, external=True)
+    y = g.tensor("y@1500", 16, 32)
+    g.add_op(OperatorNode(
+        name="SwiGLU@1500", op_type="swiglu", resource=VECTOR, rank=1500,
+        inputs=[h], outputs=[y],
+        split_spec=SplitSpec(split_inputs=None, split_output_dims=(0,),
+                             task_num_fn=lambda c, op: 4)))
+    s = compile_schedule(g)
+    res = simulate_unified(s, serialize_dispatch=True)
+    assert res.makespan_us > 0

@@ -97,3 +97,40 @@ def test_ratr_is_permutation(ep, rank):
     order = ratr_order(rank, ep)
     assert sorted(order) == list(range(ep))
     assert order[0] == (rank + 1) % ep
+
+
+# ---------------------------------------------------------------------------
+# Pass pipeline: every registered pass keeps arbitrary imbalanced plans legal.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["skewed", "sparse",
+                                                "hotspot"]),
+       st.sampled_from([1, 2, 3, 16]), directions,
+       st.lists(st.sampled_from(["ratr", "gmm_interleave",
+                                 "chain_interleave",
+                                 "critical_rank_first"]),
+                unique=True, max_size=4))
+def test_passes_keep_random_plans_valid(seed, kind, m_split, direction,
+                                        pipeline):
+    from repro.core.routing import hotspot_plan, random_plan, skewed_plan
+    rng = np.random.default_rng(seed)
+    ep, e_loc = int(rng.integers(2, 5)), int(rng.integers(1, 4))
+    if kind == "skewed":
+        plan = skewed_plan(ep, e_loc, int(rng.integers(1, 9)),
+                           float(rng.uniform(0, 2.5)))
+    elif kind == "sparse":
+        plan = random_plan(ep, e_loc, 7, rng, p_zero=0.4)
+    else:
+        rows = int(rng.integers(2, 9))
+        bg = int(rng.integers(0, 2))
+        if (bg + ep - 1) * (ep * e_loc - 1) > ep * e_loc * rows:
+            bg = 0               # background must fit the per-source budget
+        plan = hotspot_plan(ep, e_loc, rows, background=bg)
+    cfg = ScheduleConfig(ep=ep, e_loc=e_loc, rows=0, d_model=16, d_ff=8,
+                         gmm_m_split=m_split,
+                         gmm_split_mode="source_aligned", plan=plan)
+    s = compile_schedule(_build(cfg, direction), pipeline=pipeline)
+    validate_schedule(s)
+    order = execution_order(s)
+    assert sorted(order) == list(range(s.n_tasks))
