@@ -24,6 +24,8 @@ SECTIONS = [
      "benchmarks.bench_sched_overhead"),
     ("imbalance", "Routing-skew sweep: unified vs baseline under load skew",
      "benchmarks.bench_imbalance"),
+    ("dropless", "Dropless plan-keyed schedule reuse: exact vs bucketed",
+     "benchmarks.bench_dropless"),
     ("ep_modes", "EP mode comparison on the JAX system",
      "benchmarks.bench_ep_modes"),
     ("roofline", "TPU roofline table from the dry-run",

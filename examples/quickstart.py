@@ -46,6 +46,26 @@ print(f"simulated D2C: baseline {base.makespan_us:.0f}us → "
       f"unified {uni.makespan_us:.0f}us "
       f"({base.makespan_us / uni.makespan_us:.2f}x)")
 
+# --- 2b. dropless: compile from real router output, reuse via buckets ------
+from repro.core.ssc import SSCCache
+from repro.models.moe import MoEConfig, init_moe, plan_from_routing, \
+    router_topk
+
+mc = MoEConfig(n_experts=8, top_k=2, d_expert=16)
+moe_params = init_moe(jax.random.PRNGKey(2), 64, mc)
+cache = SSCCache(max_entries=16)
+for step in range(3):
+    xb = jax.random.normal(jax.random.PRNGKey(10 + step), (128, 64))
+    _, top_i = router_topk(moe_params["router"], xb, mc)
+    # capacity=None → dropless; bucket_rows quantizes the plan so jittered
+    # batches share one SSC cache entry instead of recompiling every step.
+    bridge = plan_from_routing(np.asarray(top_i), mc, 4, capacity=None,
+                               bucket_rows=32)
+    cfg_d = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=64, d_ff=16,
+                           plan=bridge.plan)
+    cache.get_or_compile(cfg_d, "forward", pipeline=["ratr"])
+print(f"dropless cache after 3 jittered batches: {cache.info()}")
+
 # --- 3. train a tiny MoE model ---------------------------------------------
 mcfg = get_smoke_config("granite-moe-3b-a800m")
 params = adamw.cast_params(M.init_params(mcfg, jax.random.PRNGKey(0)),

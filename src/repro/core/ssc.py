@@ -12,6 +12,42 @@ The blob records the schedule-pass pipeline spec that produced it
 which passes shaped its queues. An in-process :class:`SSCCache` keyed by
 shape bucket × pipeline mirrors the paper's "reuse SSC for stable shapes or
 shape buckets" behaviour (Table 2), with LRU eviction bounding it.
+
+Cache keying and bucketing semantics
+------------------------------------
+
+:meth:`SSCCache.key` identifies a compiled schedule by::
+
+    (ep, e_loc, d_model, d_ff, dtype_bytes,
+     gmm_m_split, gmm_split_mode,
+     cfg.routing.counts,          # the full per-(src, dst, expert) matrix
+     direction, pipeline.key())
+
+Two properties follow:
+
+* **Effective-routing keying.** The key uses ``cfg.routing`` — the plan
+  that actually drives extents — so a ``ScheduleConfig(rows=r)`` balanced
+  grid and an explicit ``RoutingPlan.balanced(ep, e_loc, r)`` share one
+  entry, while any genuinely different per-cell count matrix compiles (and
+  caches) a fresh SSC. Legacy boolean kwargs (``ratr=`` …) and the
+  equivalent ``pipeline=`` spec normalize to the same canonical pipeline
+  and share one entry.
+
+* **Bucketed-plan keys.** The dropless training path never inserts exact
+  per-batch plans directly: ``models.moe.plan_from_routing(bucket_rows=b)``
+  quantizes each nonzero cell count up to a multiple of ``b`` (empty cells
+  stay empty, preserving task-graph sparsity) *before* the plan reaches the
+  cache, so every batch whose counts land in the same buckets maps to the
+  same ``cfg.routing.counts`` tuple — one key, one compile. Padding rows
+  are zero-filled in the executor's send buffers and provably do not change
+  results (zeros propagate through GMM/SwiGLU and are never gathered by
+  Combine). ``bucket_rows=1`` keys exact plans: every distinct routing is
+  a miss, which is the recompile-rate baseline ``bench_dropless`` measures.
+
+``info()`` reports cumulative ``hits``/``misses``/``evictions`` plus
+occupancy; ``step_stats()`` returns the *deltas* since its previous call —
+the per-training-step recompile counters the dropless step surfaces in its
+metrics dict.
 """
 
 from __future__ import annotations
@@ -114,6 +150,7 @@ class SSCCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self._step_snapshot = (0, 0, 0)
 
     @staticmethod
     def key(cfg: ScheduleConfig, direction: str, pipeline=None,
@@ -157,4 +194,22 @@ class SSCCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+        }
+
+    def step_stats(self) -> dict:
+        """Hit/miss/eviction *deltas* since the previous call, + occupancy.
+
+        The dropless training step calls this once per executed step to
+        surface per-step recompile counts in its metrics dict; ``misses``
+        is the number of schedules compiled during the step (0 on a fully
+        cache-served step).
+        """
+        cur = (self.hits, self.misses, self.evictions)
+        last = self._step_snapshot
+        self._step_snapshot = cur
+        return {
+            "hits": cur[0] - last[0],
+            "misses": cur[1] - last[1],
+            "evictions": cur[2] - last[2],
+            "entries": len(self._cache),
         }

@@ -1,0 +1,292 @@
+"""Dropless, data-dependent MoE execution for the training step.
+
+The fixed-capacity paths (``moe_grouped``, ``parallel/ep.py``) pad every
+(destination, expert) pair to a static capacity and *drop* overflow tokens so
+all shapes stay static under jit. This module is the opposite trade, and the
+paper's core claim wired into training: each batch's **actual** router output
+is turned into a :class:`~repro.core.routing.RoutingPlan` with
+``plan_from_routing(capacity=None)`` (no token is ever dropped), the plan's
+schedule is fetched from — or compiled into — a process-level
+:class:`~repro.core.ssc.SSCCache`, and the **plan-sized** tile taskflow is
+executed instead of the fixed-capacity one.
+
+Because a fresh imbalanced plan would recompile every step, plans are
+*shape-bucketed* first (``bucket_rows``: per-cell counts quantize up to a
+bucket multiple, padding rows stay zero) so that batch-to-batch routing
+jitter maps to a stable cache key; ``bench_dropless`` measures the
+recompile-rate difference between exact and bucketed keys.
+
+Integration is the same pluggable ``moe_impl(params, x, mc)`` seam the EP
+path uses: the router (and therefore the gradient into router weights) runs
+in JAX, while the schedulable Dispatch→GMM→SwiGLU→GMM→Combine fragment runs
+through ``jax.pure_callback`` on the schedule executor, with a
+``jax.custom_vjp`` whose backward executes the backward-direction schedule —
+so ``train_step`` trains *through* compiled schedules, forward and backward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.odg import ScheduleConfig
+from repro.core.ssc import SSCCache
+
+
+@dataclasses.dataclass(frozen=True)
+class DroplessConfig:
+    """Configuration of the dropless data-dependent training path.
+
+    ``ep`` is the size of the *compiled* EP group: tokens are split
+    contiguously over ``ep`` virtual source ranks and experts over ``ep``
+    expert shards, matching the fragment the scheduling stack compiles.
+    ``bucket_rows`` quantizes per-cell plan counts (1 = exact plans, every
+    distinct routing compiles its own SSC). ``pipeline`` is a schedule-pass
+    pipeline spec applied to both directions (direction-gated passes such as
+    ``gmm_interleave`` no-op on forward).
+    """
+
+    ep: int = 1
+    bucket_rows: int = 16
+    gmm_m_split: int = 1
+    gmm_split_mode: str = "source_aligned"
+    pipeline: tuple = ("ratr", "gmm_interleave")
+    cache_entries: int = 64
+
+
+_PROCESS_CACHE: Optional[SSCCache] = None
+
+
+def get_process_cache(max_entries: int = 64) -> SSCCache:
+    """The process-level SSC cache shared by every dropless step fn.
+
+    The cache keeps the *largest* bound ever requested: a later consumer
+    asking for more headroom grows it (entries are never proactively
+    evicted by a smaller request).
+    """
+    global _PROCESS_CACHE
+    if _PROCESS_CACHE is None:
+        _PROCESS_CACHE = SSCCache(max_entries=max_entries)
+    elif max_entries > _PROCESS_CACHE.max_entries:
+        _PROCESS_CACHE.max_entries = max_entries
+    return _PROCESS_CACHE
+
+
+class DroplessMoE:
+    """A dropless ``moe_impl`` plus its schedule cache handle."""
+
+    def __init__(self, dc: DroplessConfig, act: str = "swiglu",
+                 cache: Optional[SSCCache] = None):
+        if act != "swiglu":
+            raise ValueError(
+                f"dropless schedules execute the SwiGLU fragment; act={act!r}")
+        self.dc = dc
+        self.cache = cache if cache is not None else get_process_cache(
+            dc.cache_entries)
+        self.impl = _make_impl(dc, self.cache)
+        info = self.cache.info()
+        self._snapshot = (info["hits"], info["misses"], info["evictions"])
+
+    def step_stats(self) -> dict:
+        """Cache counter deltas since this handle's previous call.
+
+        The snapshot lives on the handle, not the (possibly shared) cache,
+        so independent consumers — two models on one process cache, or a
+        monitoring loop calling ``cache.step_stats()`` — don't zero each
+        other's per-step numbers. With a shared cache the deltas still
+        aggregate *all* activity between this handle's calls; give each
+        model its own ``SSCCache`` when per-model attribution matters.
+        """
+        info = self.cache.info()
+        cur = (info["hits"], info["misses"], info["evictions"])
+        last = self._snapshot
+        self._snapshot = cur
+        return {"hits": cur[0] - last[0], "misses": cur[1] - last[1],
+                "evictions": cur[2] - last[2], "entries": info["entries"]}
+
+
+def make_moe_dropless(model_cfg, dc: DroplessConfig,
+                      cache: Optional[SSCCache] = None) -> DroplessMoE:
+    """Build the dropless MoE impl for a model config (validates shapes)."""
+    mc = model_cfg.moe
+    if mc is None:
+        raise ValueError("dropless MoE requires a MoE model config")
+    if mc.e_total % dc.ep:
+        raise ValueError(f"e_total={mc.e_total} not divisible by "
+                         f"dropless ep={dc.ep}")
+    return DroplessMoE(dc, act=model_cfg.act, cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# The schedulable fragment as a custom-vjp JAX function backed by callbacks.
+# ---------------------------------------------------------------------------
+
+
+def _schedule_cfg(dc: DroplessConfig, plan, d_model: int,
+                  d_ff: int) -> ScheduleConfig:
+    return ScheduleConfig(ep=dc.ep, e_loc=plan.e_loc, rows=0,
+                          d_model=d_model, d_ff=d_ff,
+                          gmm_m_split=dc.gmm_m_split,
+                          gmm_split_mode=dc.gmm_split_mode, plan=plan)
+
+
+def _bridge_of(dc: DroplessConfig, top_i, mc):
+    from repro.models.moe import plan_from_routing
+    return plan_from_routing(top_i, mc, dc.ep, capacity=None,
+                             bucket_rows=dc.bucket_rows)
+
+
+def _exec_forward(dc: DroplessConfig, cache: SSCCache, mc,
+                  xt, top_p, top_i, w1, w2):
+    """Host side: plan → cached schedule → executor → combined tokens.
+
+    ``w1``/``w2`` are the per-rank expert weights ``[ep, e_loc, d, 2f]`` /
+    ``[ep, e_loc, f, d]``. Returns ``y [T, d]`` float32.
+    """
+    from repro.core import executor as ex
+    from repro.models.moe import bridge_combine, bridge_dispatch
+
+    xt = np.asarray(xt, dtype=np.float32)
+    top_p = np.asarray(top_p, dtype=np.float32)
+    top_i = np.asarray(top_i)
+    T, d = xt.shape
+    f = mc.d_expert
+
+    bridge = _bridge_of(dc, top_i, mc)
+    plan = bridge.plan
+    cfg = _schedule_cfg(dc, plan, d, f)
+    sched = cache.get_or_compile(cfg, "forward", pipeline=list(dc.pipeline))
+
+    x_src = bridge_dispatch(bridge, xt.reshape(dc.ep, T // dc.ep, d))
+    st = ex.ExecutorState(cfg)
+    ex.load_forward_state_plan(cfg, st, x_src, w1, w2)
+    ex.execute(sched, st, rng=np.random.default_rng(0))
+    y_ret = [st.get("y_ret", r) if plan.send_rows(r)
+             else np.zeros((0, d), np.float32) for r in range(dc.ep)]
+    y = bridge_combine(bridge, y_ret, top_p)
+    return y.reshape(T, d)
+
+
+def _make_impl(dc: DroplessConfig, cache: SSCCache):
+    """Build ``moe_impl(params, x, mc)`` executing plan-sized schedules."""
+
+    def moe_impl(params, x, mc):
+        from repro.models.moe import router_topk
+
+        B, S, d = x.shape
+        T = B * S
+        if T % dc.ep:
+            raise ValueError(f"T={T} tokens not divisible by dropless "
+                             f"ep={dc.ep}")
+        xt = x.reshape(T, d)
+        top_p, top_i = router_topk(params["router"], xt, mc)
+
+        f = mc.d_expert
+
+        # ---- host callbacks ------------------------------------------------
+        def fwd_host(xt_h, top_p_h, top_i_h, w_in_h, w_down_h):
+            w1 = np.asarray(w_in_h, np.float32).reshape(
+                dc.ep, mc.e_total // dc.ep, d, 2 * f)
+            w2 = np.asarray(w_down_h, np.float32).reshape(
+                dc.ep, mc.e_total // dc.ep, f, d)
+            return _exec_forward(dc, cache, mc, xt_h, top_p_h, top_i_h,
+                                 w1, w2)
+
+        def bwd_host(xt_h, top_p_h, top_i_h, w_in_h, w_down_h, g_h):
+            from repro.core import executor as ex
+            from repro.models.moe import bridge_dispatch
+
+            xt_h = np.asarray(xt_h, np.float32)
+            top_p_h = np.asarray(top_p_h, np.float32)
+            top_i_h = np.asarray(top_i_h)
+            g = np.asarray(g_h, np.float32)
+            e_loc = mc.e_total // dc.ep
+            w1 = np.asarray(w_in_h, np.float32).reshape(dc.ep, e_loc, d,
+                                                        2 * f)
+            w2 = np.asarray(w_down_h, np.float32).reshape(dc.ep, e_loc, f, d)
+
+            bridge = _bridge_of(dc, top_i_h, mc)
+            plan = bridge.plan
+            cfg = _schedule_cfg(dc, plan, d, f)
+            t_loc = T // dc.ep
+            rows = bridge.send_row                        # [ep, t_loc, k]
+            g3 = g.reshape(dc.ep, t_loc, d)
+            tp3 = top_p_h.reshape(dc.ep, t_loc, mc.top_k)
+
+            # Recompute the saved activations the backward schedule consumes.
+            x_src = bridge_dispatch(bridge, xt_h.reshape(dc.ep, t_loc, d))
+            fwd = ex.reference_forward_plan(cfg, x_src, w1, w2)
+
+            # Per-row cotangent entering the fragment: dy[row] = p · g_token.
+            dy = [np.zeros((plan.send_rows(s), d), np.float32)
+                  for s in range(dc.ep)]
+            for s in range(dc.ep):
+                r = rows[s].reshape(-1)
+                valid = r >= 0
+                contrib = (tp3[s][:, :, None] * g3[s][:, None, :]).reshape(
+                    -1, d)
+                np.add.at(dy[s], r[valid], contrib[valid])
+
+            sched = cache.get_or_compile(cfg, "backward",
+                                         pipeline=list(dc.pipeline))
+            st = ex.ExecutorState(cfg)
+            ex.load_backward_state_plan(cfg, st, fwd, w1, w2, dy)
+            ex.execute(sched, st, rng=np.random.default_rng(0))
+
+            dxt = np.zeros((dc.ep, t_loc, d), np.float32)
+            dtp = np.zeros((dc.ep, t_loc, mc.top_k), np.float32)
+            for s in range(dc.ep):
+                if not plan.send_rows(s):
+                    continue
+                dx_ret = st.get("dx_ret", s)
+                y_ret = fwd["y_ret"][s]
+                for j in range(mc.top_k):
+                    r = rows[s, :, j]
+                    valid = r >= 0
+                    dxt[s, valid] += dx_ret[r[valid]]
+                    dtp[s, valid, j] = np.einsum(
+                        "td,td->t", g3[s, valid], y_ret[r[valid]])
+            dw1 = np.stack([st.get("dW1", r) if plan.recv_rows(r)
+                            else np.zeros((e_loc, d, 2 * f), np.float32)
+                            for r in range(dc.ep)])
+            dw2 = np.stack([st.get("dW2", r) if plan.recv_rows(r)
+                            else np.zeros((e_loc, f, d), np.float32)
+                            for r in range(dc.ep)])
+            return (dxt.reshape(T, d), dtp.reshape(T, mc.top_k),
+                    dw1.reshape(mc.e_total, d, 2 * f),
+                    dw2.reshape(mc.e_total, f, d))
+
+        # ---- custom-vjp fragment ------------------------------------------
+        @jax.custom_vjp
+        def fragment(xt, top_p, top_i, w_in, w_down):
+            return jax.pure_callback(
+                fwd_host, jax.ShapeDtypeStruct((T, d), jnp.float32),
+                xt, top_p, top_i, w_in, w_down)
+
+        def fragment_fwd(xt, top_p, top_i, w_in, w_down):
+            y = fragment(xt, top_p, top_i, w_in, w_down)
+            return y, (xt, top_p, top_i, w_in, w_down)
+
+        def fragment_bwd(res, g):
+            xt, top_p, top_i, w_in, w_down = res
+            dxt, dtp, dw1, dw2 = jax.pure_callback(
+                bwd_host,
+                (jax.ShapeDtypeStruct((T, d), jnp.float32),
+                 jax.ShapeDtypeStruct((T, mc.top_k), jnp.float32),
+                 jax.ShapeDtypeStruct(w_in.shape, jnp.float32),
+                 jax.ShapeDtypeStruct(w_down.shape, jnp.float32)),
+                xt, top_p, top_i, w_in, w_down, g)
+            return (dxt.astype(xt.dtype), dtp.astype(top_p.dtype),
+                    np.zeros(top_i.shape, dtype=jax.dtypes.float0),
+                    dw1.astype(w_in.dtype), dw2.astype(w_down.dtype))
+
+        fragment.defvjp(fragment_fwd, fragment_bwd)
+
+        y = fragment(xt, top_p, top_i, params["w_in"], params["w_down"])
+        return y.astype(x.dtype).reshape(B, S, d)
+
+    return moe_impl

@@ -29,6 +29,16 @@ def make_test_mesh(data: int = 2, model: int = 4):
                          **_axis_types_kw(2))
 
 
+def mesh_context(mesh):
+    """Context manager that makes ``mesh`` ambient for PartitionSpec-based
+    ``with_sharding_constraint`` calls: ``jax.set_mesh`` on jax ≥ 0.5,
+    falling back to the ``Mesh`` object itself (a context manager) on 0.4.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def dp_axes(mesh) -> tuple[str, ...]:
     """The pure data-parallel axes of a mesh (pod is outer DP)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -31,6 +31,10 @@ class StepFns:
     decode_step: object
     rules: ShardingRules
     ep_cfg: Optional[EPConfig]
+    # Set when the dropless data-dependent path is active: holds the
+    # process-level SSC cache handle (``dropless.cache.info()`` /
+    # ``step_stats()`` for recompile-rate monitoring).
+    dropless: Optional[object] = None
 
 
 def make_steps(cfg, mesh, *, opt: Optional[adamw.OptConfig] = None,
@@ -39,12 +43,27 @@ def make_steps(cfg, mesh, *, opt: Optional[adamw.OptConfig] = None,
                accum_steps: int = 0,
                fsdp: Optional[bool] = None,
                mode: str = "tp_sp",
+               dropless=None,
                grad_transform=None) -> StepFns:
+    """Build the jit-able step closures.
+
+    ``dropless``: a :class:`repro.launch.dropless.DroplessConfig` switches
+    the *training* MoE path from fixed-capacity execution to dropless,
+    data-dependent schedule compilation — each batch's actual router output
+    becomes a RoutingPlan whose (shape-bucketed) schedule is fetched from the
+    process-level SSC cache and executed plan-sized. Serving steps keep the
+    fixed-capacity/EP implementation (static shapes for decode).
+    """
     rules = ShardingRules(cfg, mesh, fsdp=fsdp, mode=mode)
     if mode == "ep_dp" and ep is not None:
         ep = dataclasses.replace(ep, dp_batch=True)
     moe_impl = (make_moe_ep(mesh, ep, cfg.act)
                 if (ep is not None and cfg.family == "moe") else None)
+    dropless_moe = None
+    if dropless is not None and cfg.family == "moe":
+        from repro.launch.dropless import make_moe_dropless
+        dropless_moe = make_moe_dropless(cfg, dropless)
+    train_moe_impl = dropless_moe.impl if dropless_moe else moe_impl
     opt = opt or adamw.OptConfig()
     if accum_steps == 0:
         # Default policy: microbatch the big archs so train activations fit
@@ -72,7 +91,8 @@ def make_steps(cfg, mesh, *, opt: Optional[adamw.OptConfig] = None,
         B, S = batch["labels"].shape
 
         def loss_of(p, b):
-            with _ctx(b["labels"].shape[0], S), moe_impl_context(moe_impl):
+            with _ctx(b["labels"].shape[0], S), \
+                    moe_impl_context(train_moe_impl):
                 return M.loss_fn(cfg, p, b)
 
         if accum_steps > 1 and B % accum_steps == 0:
@@ -92,6 +112,12 @@ def make_steps(cfg, mesh, *, opt: Optional[adamw.OptConfig] = None,
         params2, opt_state2, metrics = adamw.apply_updates(
             params, grads, opt_state, opt, grad_transform=grad_transform)
         metrics["loss"] = lv
+        # Surface per-step SSC cache deltas (recompiles this step, hit
+        # count, occupancy). Host-side counters only exist eagerly; under
+        # jit read ``fns.dropless.cache.info()`` from the training loop.
+        if dropless_moe is not None and not isinstance(lv, jax.core.Tracer):
+            for k, v in dropless_moe.step_stats().items():
+                metrics[f"ssc_{k}"] = v
         return params2, opt_state2, metrics
 
     # ---- serving -----------------------------------------------------------
@@ -114,7 +140,8 @@ def make_steps(cfg, mesh, *, opt: Optional[adamw.OptConfig] = None,
             return M.decode_step(cfg, params, token, cache)
 
     return StepFns(train_step=train_step, prefill_step=prefill_step,
-                   decode_step=decode_step, rules=rules, ep_cfg=ep)
+                   decode_step=decode_step, rules=rules, ep_cfg=ep,
+                   dropless=dropless_moe)
 
 
 # ---------------------------------------------------------------------------

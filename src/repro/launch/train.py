@@ -29,6 +29,16 @@ def main(argv=None):
                     choices=["tp_sp", "zero1", "ep_dp"])
     ap.add_argument("--ep-mode", default="hyperparallel",
                     choices=["hyperparallel", "baseline"])
+    ap.add_argument("--dropless", action="store_true",
+                    help="compile/reuse schedules from each batch's actual "
+                         "router output (capacity=None) instead of running "
+                         "the fixed-capacity path")
+    ap.add_argument("--dropless-ep", type=int, default=0,
+                    help="EP group size of the compiled dropless fragment "
+                         "(0 = the mesh's model-axis size)")
+    ap.add_argument("--dropless-bucket", type=int, default=16,
+                    help="shape-bucket size for plan row counts (1 = exact "
+                         "plans, recompile on every routing change)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=8)
@@ -54,12 +64,12 @@ def main(argv=None):
     from repro.optim import adamw
     from repro.parallel.ep import EPConfig
 
+    from repro.launch.mesh import _axis_types_kw, mesh_context
+
     dims = [int(x) for x in args.mesh.split("x")]
     names = (("pod", "data", "model") if len(dims) == 3
              else ("data", "model"))
-    mesh = jax.make_mesh(tuple(dims), names,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(dims))
+    mesh = jax.make_mesh(tuple(dims), names, **_axis_types_kw(len(dims)))
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "moe":
@@ -76,7 +86,14 @@ def main(argv=None):
                          total_steps=args.steps)
     ep = (EPConfig(mode=args.ep_mode, capacity_factor=4.0)
           if cfg.family == "moe" else None)
-    fns = St.make_steps(cfg, mesh, opt=oc, ep=ep, mode=args.mode)
+    dropless = None
+    if args.dropless and cfg.family == "moe":
+        from repro.launch.dropless import DroplessConfig
+        dropless = DroplessConfig(
+            ep=args.dropless_ep or mesh.shape.get("model", 1),
+            bucket_rows=args.dropless_bucket)
+    fns = St.make_steps(cfg, mesh, opt=oc, ep=ep, mode=args.mode,
+                        dropless=dropless)
 
     params = adamw.cast_params(M.init_params(cfg, jax.random.PRNGKey(0)),
                                cfg.compute_dtype)
@@ -87,7 +104,7 @@ def main(argv=None):
             (args.global_batch, args.seq), jnp.int32),
         "labels": jax.ShapeDtypeStruct(
             (args.global_batch, args.seq), jnp.int32)}
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         step = St.jit_train_step(fns, params_shape, batch_shapes)
         ps = fns.rules.param_shardings(params_shape)
         oss = fns.rules.opt_state_shardings(params_shape)
@@ -123,6 +140,13 @@ def main(argv=None):
               f"gnorm {m['grad_norm']:.3f} {m['step_time_s']*1e3:.0f}ms")
     if run.stragglers:
         print("stragglers:", run.stragglers)
+    if fns.dropless is not None:
+        info = fns.dropless.cache.info()
+        total = max(1, info["hits"] + info["misses"])
+        print(f"dropless SSC cache: {info['entries']} entries "
+              f"({info['bytes'] / 1024:.0f} KiB), "
+              f"hit rate {info['hits'] / total:.1%} "
+              f"({info['misses']} compiles, {info['evictions']} evictions)")
     return run
 
 

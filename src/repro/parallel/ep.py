@@ -77,6 +77,28 @@ def plan_from_dispatch(top_i, mc: MoEConfig, ep: int, C: int):
     return RoutingPlan.from_counts(counts)
 
 
+def ring_chunk_caps(plan, ep: int) -> tuple:
+    """Per-ring-step row caps from a :class:`RoutingPlan`.
+
+    ``caps[k]`` is the largest per-(dst, expert) row count any source rank
+    moves at ring distance ``k`` (source ``s`` → destination ``(s + k) %
+    ep``). The hyperparallel ring uses these to slice each step's ppermute
+    chunk to plan size instead of the full fixed capacity — and a step whose
+    cap is 0 carries only padding for *every* rank, so it is skipped
+    entirely (no ppermute pair, no FFN). Caps are an upper bound per SPMD
+    step: all ranks must move the same shape, so the straggler source sets
+    the cap.
+    """
+    if plan.ep != ep:
+        raise ValueError(f"plan ep={plan.ep} != mesh ep={ep}")
+    c = np.asarray(plan.counts, dtype=np.int64)       # [src, dst, e_loc]
+    caps = []
+    for k in range(ep):
+        dst = (np.arange(ep) + k) % ep
+        caps.append(int(c[np.arange(ep), dst].max()))
+    return tuple(caps)
+
+
 def _expert_ffn_local(w_in, w_down, x, act, use_pallas):
     if use_pallas:
         from repro.kernels.ops import moe_expert_ffn
@@ -124,10 +146,24 @@ def _combine(back, top_p, top_i, slot, T, d, ep, e_loc, C, dtype):
     return y.astype(dtype)
 
 
-def make_moe_ep(mesh, epc: EPConfig, act: str = "swiglu"):
-    """Returns moe_impl(params, x, mc) running EP over the model axis."""
+def make_moe_ep(mesh, epc: EPConfig, act: str = "swiglu", plan=None):
+    """Returns moe_impl(params, x, mc) running EP over the model axis.
+
+    ``plan``: an optional host-known :class:`RoutingPlan` (e.g. from
+    ``plan_from_dispatch`` on this batch's routing, or a bucketed plan
+    covering it). In ``hyperparallel`` mode the ring then moves *plan-sized*
+    ppermute chunks — each step's chunk is sliced to the largest row count
+    any source actually sends at that ring distance — and ring steps that
+    would carry only padding for every rank are skipped outright (the
+    ROADMAP "ragged EP path"). Chunk caps are static Python ints, so a new
+    plan triggers a retrace: pair this with plan bucketing for reuse, the
+    same trade the SSC cache makes. If the plan undercounts the real
+    routing, overflow rows degrade to capacity-style drops (their result
+    rows stay zero); they are never mis-gathered.
+    """
     ep = mesh.shape[epc.axis]
     dp = tuple(a for a in mesh.axis_names if a != epc.axis)
+    ring_caps = ring_chunk_caps(plan, ep) if plan is not None else None
 
     def moe_impl(params, x, mc: MoEConfig):
         B, S, d = x.shape
@@ -175,28 +211,41 @@ def make_moe_ep(mesh, epc: EPConfig, act: str = "swiglu"):
         """RATR ring: step k moves the chunk for destination (r+k) and the
         FFN for the chunk that just arrived runs immediately; results ride
         the reverse ring back to their source. Step 0 is the rank-local
-        chunk (an HBM copy, not link traffic — same as the simulator)."""
+        chunk (an HBM copy, not link traffic — same as the simulator).
+
+        With ``ring_caps`` (a routing plan is known), each step's chunk is
+        sliced to ``min(C, caps[k])`` rows per (dst, expert) slot — tokens
+        always occupy the head of each slot, so the sliced rows are exactly
+        the routed ones — and all-padding steps (cap 0) are skipped.
+        """
         r = jax.lax.axis_index(epc.axis)
         e_loc, C, d = send.shape[1], send.shape[2], send.shape[3]
         back = jnp.zeros_like(send)
 
-        # k = 0: local chunk.
-        chunk0 = jnp.take(send, r, axis=0)                # dynamic [e_loc,C,d]
-        y0 = _expert_ffn_local(w_in, w_down, chunk0, act, epc.use_pallas)
-        back = jax.lax.dynamic_update_index_in_dim(back, y0, r, axis=0)
+        def step_cap(k):
+            return C if ring_caps is None else min(C, ring_caps[k])
 
-        fwd_perm = [[(i, (i + 1) % ep) for i in range(ep)]]
+        # k = 0: local chunk.
+        c0 = step_cap(0)
+        if c0 > 0:
+            chunk0 = jnp.take(send, r, axis=0)[:, :c0]   # dyn [e_loc,c0,d]
+            y0 = _expert_ffn_local(w_in, w_down, chunk0, act, epc.use_pallas)
+            back = jax.lax.dynamic_update_slice(back, y0[None], (r, 0, 0, 0))
+
         for k in range(1, ep):
+            ck = step_cap(k)
+            if ck == 0:
+                continue        # every rank's step-k chunk is pure padding
             perm_fwd = [(i, (i + k) % ep) for i in range(ep)]
             perm_bwd = [(i, (i - k) % ep) for i in range(ep)]
             # RATR: source r's step-k chunk targets destination (r+k).
-            chunk = jnp.take(send, (r + k) % ep, axis=0)
+            chunk = jnp.take(send, (r + k) % ep, axis=0)[:, :ck]
             arrived = jax.lax.ppermute(chunk, epc.axis, perm_fwd)
             y = _expert_ffn_local(w_in, w_down, arrived, act,
                                   epc.use_pallas)
             returned = jax.lax.ppermute(y, epc.axis, perm_bwd)
-            back = jax.lax.dynamic_update_index_in_dim(
-                back, returned, (r + k) % ep, axis=0)
+            back = jax.lax.dynamic_update_slice(
+                back, returned[None], ((r + k) % ep, 0, 0, 0))
         return back
 
     return moe_impl

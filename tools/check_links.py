@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Fail if a markdown file links to a repo path that doesn't exist.
+
+Usage: python tools/check_links.py README.md docs/architecture.md ...
+
+Checks inline markdown links ``[text](target)``. External targets
+(``http(s)://``, ``mailto:``) and pure in-page anchors (``#...``) are
+skipped; relative targets resolve against the markdown file's directory and
+must exist (an optional ``#fragment`` suffix is ignored).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(md_path: Path) -> list[str]:
+    errors = []
+    for n, line in enumerate(md_path.read_text().splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md_path.parent / rel).exists():
+                errors.append(f"{md_path}:{n}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check(p))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"link check OK ({len(argv)} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
