@@ -22,6 +22,8 @@ SECTIONS = [
      "benchmarks.bench_swiglu_add"),
     ("sched_overhead", "Fig 10: static vs dynamic scheduling",
      "benchmarks.bench_sched_overhead"),
+    ("autoselect", "Cost-model-guided pipeline selection latency",
+     "benchmarks.bench_autoselect"),
     ("imbalance", "Routing-skew sweep: unified vs baseline under load skew",
      "benchmarks.bench_imbalance"),
     ("dropless", "Dropless plan-keyed schedule reuse: exact vs bucketed",

@@ -1,0 +1,452 @@
+"""Cost-model-guided pipeline auto-selection.
+
+The paper's thesis is that the tile-level taskflow is priced *at compile
+time* — the ``--sched-sweep`` table showed that which pass pipeline wins
+depends on the routing profile (``critical_rank_first`` on concentrated
+hotspots, branch interleaving on skewed backward graphs, plain RATR on the
+balanced grid), but until now a human read that table and hardcoded the
+pick. This module closes the loop Piper-style: ``auto_pipeline`` enumerates
+the canonical candidate space (``core.passes.SCHED_PIPELINES`` plus a small
+``gmm_m_split`` budget grid), prices every candidate with the *same*
+:class:`~repro.core.costmodel.CostModel` the passes and simulator share, and
+returns the predicted-best ``(Pipeline, ScheduleConfig)`` — no simulator run,
+no schedule compile.
+
+Pricing never generates the real task set (dependency derivation on a dense
+plan costs ~1s; selection must stay O(ms) so the dropless path can afford it
+per batch). Instead a *synthetic* cube task set is built straight from the
+``RoutingPlan`` — one ``TaskDescriptor`` per (rank, expert, GMM op) with the
+exact flop/byte formulas of ``core/tasks.py`` — and handed to
+``CostModel.rank_cube_us`` / ``critical_rank``, the static straggler
+analysis the ``critical_rank_first`` pass itself consumes. Plan-profile
+features (skew ratio, sparsity, hotspot concentration) prune the grid:
+re-tiling candidates are only generated for starved-hotspot plans, and
+pass effects that are gated no-ops (``gmm_interleave`` forward,
+``critical_rank_first`` below its straggler threshold) are priced as such.
+
+Resolution points (the literal string ``"auto"`` never escapes them):
+
+* ``compile_schedule(odg, pipeline="auto")`` — resolves the pipeline with
+  the tiling pinned (the ODG's task set is already built);
+* ``SSCCache.key`` / ``SSCCache.get_or_compile`` — resolve pipeline *and*
+  tiling, so cached schedules are keyed by the resolved spec and an
+  ``"auto"`` request cache-hits the equivalent explicit request;
+* ``launch/hillclimb.py --sched-sweep`` — the ``auto`` row and the
+  ``--selector-report`` predicted-vs-simulated accuracy table.
+
+Selection is deterministic (equal plans resolve to equal specs — an SSC
+cache invariant) and memoized on the hashable ``ScheduleConfig``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+
+from .costmodel import CostModel
+from .odg import CTQ, ScheduleConfig
+from .passes import CRIT_STRAGGLER_THRESHOLD, SCHED_PIPELINES, Pipeline
+from .routing import RoutingPlan
+from .tasks import TaskDescriptor
+
+AUTO = "auto"
+# A (rank, expert) block holding more than this fraction of all routed rows
+# marks a concentrated hotspot (RATR's ring rotation stops mattering: all
+# traffic converges on one destination anyway).
+_CONC_HOTSPOT = 0.5
+# Expert-level imbalance below which backward branch interleaving is priced
+# as a small loss (tiny uniform blocks: interleaving only stretches the
+# producer→consumer reuse distance the chain order already had).
+_IL_SKEW_MIN = 1.25
+# Calibrated effect sizes (fractions of the critical rank's cube-pool time),
+# fitted against the ep=8 sweep (launch/hillclimb.py --sched-sweep) and
+# re-checked at fixture scale by tests/test_autoselect.py.
+_IL_GAIN = 0.06          # backward branch interleave, imbalanced plans
+_IL_LOSS = 0.02          # backward branch interleave, balanced plans
+_CRIT_CHAIN_GAIN = 0.25  # starved-chain interleave on the critical rank
+_CRIT_HOIST_LOSS = 0.25  # peer-latency trade of the comm hoist (graded skew)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanFeatures:
+    """The plan profile that prunes the candidate grid."""
+
+    skew: float          # max/mean recv rows over ranks (straggler potential)
+    expert_skew: float   # max/mean rows over (rank, expert) slots
+    sparsity: float      # fraction of empty (src, dst, expert) cells
+    conc: float          # largest (rank, expert) block / total routed rows
+    hot_rows: int        # rows of that largest block
+    total_rows: int
+
+    @property
+    def balanced(self) -> bool:
+        return self.expert_skew <= _IL_SKEW_MIN
+
+    @property
+    def hotspot(self) -> bool:
+        return self.conc >= _CONC_HOTSPOT
+
+
+def plan_features(plan: RoutingPlan) -> PlanFeatures:
+    c = np.asarray(plan.counts, dtype=np.int64)
+    total = int(c.sum())
+    blocks = c.sum(axis=0)                       # [dst rank, expert] rows
+    hot = int(blocks.max()) if blocks.size else 0
+    return PlanFeatures(
+        skew=plan.rank_imbalance(),
+        expert_skew=plan.expert_imbalance(),
+        sparsity=float((c == 0).mean()),
+        conc=hot / total if total else 0.0,
+        hot_rows=hot,
+        total_rows=total,
+    )
+
+
+class _TaskSetView:
+    """Duck-typed stand-in for a Schedule: just ``tasks`` + ``ep``.
+
+    ``CostModel.rank_cube_us`` / ``critical_rank`` only touch these two
+    attributes, so the selector can run the same static straggler analysis
+    the ``critical_rank_first`` pass uses — on a synthetic task set built
+    straight from the plan, without compiling a schedule.
+    """
+
+    def __init__(self, tasks: list[TaskDescriptor], ep: int):
+        self.tasks = tasks
+        self.ep = ep
+
+
+# Cube flops per routed row for each GMM op of the two graphs, as emitted by
+# core/tasks.py (`2 * rows * K * N` with K/N in elements): forward runs
+# GMM1 [d → 2f] + GMM2 [f → d]; backward runs act_grad [d → f] +
+# w2_grad [d × f] + gate_grad [2f → d] + w1_grad [2f × d].
+def _gmm_ops(direction: str, d: int, f: int) -> list[tuple[str, float]]:
+    if direction == "forward":
+        return [("gmm1", 2.0 * d * 2 * f), ("gmm2", 2.0 * f * d)]
+    return [("act_grad", 2.0 * d * f), ("w2_grad", 2.0 * d * f),
+            ("gate_grad", 2.0 * 2 * f * d), ("w1_grad", 2.0 * 2 * f * d)]
+
+
+def cube_taskset(plan: RoutingPlan, cfg: ScheduleConfig,
+                 direction: str) -> _TaskSetView:
+    """Synthetic per-(rank, expert, op) CTQ task set mirroring tasks.py.
+
+    Tiling does not change a rank's cube-time *sum* (``task_us`` is linear
+    in flops at fixed residency), so one task per expert block prices
+    ``rank_cube_us`` exactly while staying O(ep * e_loc) objects.
+    """
+    d, f = cfg.d_model, cfg.d_ff
+    ops = _gmm_ops(direction, d, f)
+    tds: list[TaskDescriptor] = []
+    for r in range(plan.ep):
+        for e in range(plan.e_loc):
+            rows = plan.expert_rows(r, e)
+            if rows == 0:
+                continue
+            for which, flops_per_row in ops:
+                tds.append(TaskDescriptor(
+                    task_type="GMM", queue_type=CTQ, rank=r,
+                    flops=flops_per_row * rows,
+                    meta={"expert": e, "which": which}))
+    return _TaskSetView(tds, plan.ep)
+
+
+def _comm_vec_us(plan: RoutingPlan, cfg: ScheduleConfig, direction: str,
+                 cost: CostModel) -> tuple[np.ndarray, np.ndarray]:
+    """Per-rank (link_us, vector_us) static estimates.
+
+    ``link_us`` prices each rank's total off-rank row traffic — dispatch
+    rows in plus combine/return rows out, which are row-for-row symmetric
+    in both graphs, so one combined per-rank link term covers ingress and
+    egress alike. Vector time prices the SwiGLU/SwiGLU-grad tile stream on
+    the AIV pool's aggregate bandwidth.
+    """
+    hw = cost.hw
+    d, f, db = cfg.d_model, cfg.d_ff, cfg.dtype_bytes
+    c = np.asarray(plan.counts, dtype=np.float64)
+    recv = c.sum(axis=(0, 2))                    # rows landing on each rank
+    sent = c.sum(axis=(1, 2))                    # rows leaving each source
+    local = np.diag(c.sum(axis=2)).copy()        # rank-local rows
+    row_b = d * db
+    link_bw = hw.link_gbps * 1e3                 # bytes / us
+    link = ((recv - local) + (sent - local)) * row_b / link_bw
+    # SwiGLU (fwd: read 2f, write f) / SwiGLU_grad (bwd: read f + 2f saved,
+    # write 2f) rows per rank on the AIV pool.
+    if direction == "forward":
+        bytes_per_row = (2 * f + f) * db
+    else:
+        bytes_per_row = (f + 2 * f + 2 * f) * db
+    vec = recv * bytes_per_row / (hw.aiv_gbps * 1e3)
+    return link, vec
+
+
+def _crit_tiles(plan: RoutingPlan, cfg: ScheduleConfig,
+                rank: int) -> tuple[int, int, int]:
+    """(dominant-expert tile count, other-expert tile count, max tile rows)
+    for ``rank`` under the candidate tiling — the exact quantities the
+    ``critical_rank_first`` starved-chain gate checks at compile time."""
+    tiles = plan.gmm_tiles(rank, cfg.gmm_m_split, cfg.gmm_split_mode)
+    if not tiles:
+        return 0, 0, 0
+    rows_by_e: dict[int, int] = {}
+    count_by_e: dict[int, int] = {}
+    max_rows = 0
+    for (e, _m, lo, hi) in tiles:
+        rows_by_e[e] = rows_by_e.get(e, 0) + (hi - lo)
+        count_by_e[e] = count_by_e.get(e, 0) + 1
+        max_rows = max(max_rows, hi - lo)
+    dom = max(rows_by_e, key=rows_by_e.get)
+    n_dom = count_by_e[dom]
+    n_other = sum(v for e, v in count_by_e.items() if e != dom)
+    return n_dom, n_other, max_rows
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateScore:
+    """One priced candidate of the selection grid."""
+
+    tag: str                     # SCHED_PIPELINES name (+ ":m<split>" suffix)
+    pipeline: Pipeline
+    cfg: ScheduleConfig
+    predicted_us: float
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoChoice:
+    """Full selector output: the pick plus its evidence."""
+
+    pipeline: Pipeline
+    cfg: ScheduleConfig
+    predicted_us: float
+    features: PlanFeatures
+    scores: tuple[CandidateScore, ...]   # every priced candidate, best first
+
+    @property
+    def tag(self) -> str:
+        return self.scores[0].tag if self.scores else "naive"
+
+
+@dataclasses.dataclass(frozen=True)
+class _PriceContext:
+    """Everything about a (config, direction) that pipelines cannot change.
+
+    Built once per candidate tiling and shared across the per-pipeline
+    pricing loop — the synthetic task set, the per-rank cube/comm/vector
+    aggregates and the critical-rank tile census are all independent of
+    pass order (passes only permute queues).
+    """
+
+    feats: PlanFeatures
+    crit_us: float           # critical rank's total cube time
+    ratio: float             # compile-time straggler ratio
+    crit: int                # critical rank id
+    base_us: float           # max over ranks of the pool/link bounds
+    link_max: float          # busiest rank's off-rank comm time
+    link_mean: float
+    drain_us: float          # largest-tile serialization tail
+    n_dom: int               # dominant-expert tile count on the crit rank
+    n_other: int             # other-expert tile count on the crit rank
+
+
+def _price_context(cfg: ScheduleConfig, direction: str,
+                   cost: CostModel) -> _PriceContext:
+    hw = cost.hw
+    plan = cfg.routing
+    feats = plan_features(plan)
+    view = cube_taskset(plan, cfg, direction)
+    cube = cost.rank_cube_us(view)
+    ratio, crit = cost.critical_rank(view)
+    link, vec = _comm_vec_us(plan, cfg, direction, cost)
+    per_rank = [max(cube[r] / hw.num_aic, vec[r] / hw.num_aiv,
+                    float(link[r]))
+                for r in range(plan.ep)]
+    # Largest-tile drain on the critical rank: one AIC core owns one tile,
+    # so the last tile of the dominant chain serializes after the pool
+    # drains — the term the gmm_m_split budget grid trades against.
+    n_dom, n_other, max_tile_rows = _crit_tiles(plan, cfg, max(crit, 0))
+    flops_row = max(f for _, f in _gmm_ops(direction, cfg.d_model, cfg.d_ff))
+    drain = cost.task_us(TaskDescriptor(
+        task_type="GMM", queue_type=CTQ, flops=flops_row * max_tile_rows))
+    return _PriceContext(
+        feats=feats, crit_us=cube.get(crit, 0.0), ratio=ratio, crit=crit,
+        base_us=max(per_rank) if per_rank else 0.0,
+        link_max=float(link.max()) if link.size else 0.0,
+        link_mean=float(link.mean()) if link.size else 0.0,
+        drain_us=drain, n_dom=n_dom, n_other=n_other)
+
+
+def predict_makespan_us(cfg: ScheduleConfig, direction: str,
+                        pipeline_names, cost: Optional[CostModel] = None,
+                        ctx: Optional[_PriceContext] = None) -> float:
+    """Static makespan estimate of one (tiling, pipeline) candidate.
+
+    Structural lower-bound terms (cube pool, vector pool, per-rank links,
+    largest-tile drain) from the cost model, plus per-pass adjustments whose
+    *gating* replicates each pass's own compile-time conditions. Absolute
+    values undershoot the simulator (no queue/startup chaining is modeled);
+    candidate *ordering* is what selection consumes, and the
+    ``--selector-report`` table tracks the residual accuracy.
+
+    ``ctx`` shares the pipeline-independent aggregates across a candidate
+    loop (the selector prices every ``SCHED_PIPELINES`` entry against one
+    :func:`_price_context` per tiling).
+    """
+    cost = cost or CostModel(l2=False)
+    hw = cost.hw
+    if ctx is None:
+        ctx = _price_context(cfg, direction, cost)
+    feats = ctx.feats
+    names = tuple(pipeline_names)
+    t = ctx.base_us + ctx.drain_us
+
+    crit_cube_pool = ctx.crit_us / hw.num_aic
+    fires = ctx.ratio > CRIT_STRAGGLER_THRESHOLD and ctx.crit >= 0
+    starved = (fires and ctx.n_other < hw.num_aic
+               and ctx.n_dom > 2 * hw.num_aic)
+    il_active = ("gmm_interleave" in names and direction == "backward"
+                 and feats.total_rows > 0)
+
+    if "ratr" not in names and not feats.hotspot:
+        # Naive dst-major order convoys every source onto rank 0's ingress
+        # first; under a concentrated hotspot all traffic converges anyway.
+        t += ctx.link_max / max(1, cfg.ep)
+
+    if il_active:
+        if feats.balanced:
+            t += _IL_LOSS * crit_cube_pool
+        else:
+            t -= _IL_GAIN * crit_cube_pool
+
+    if "critical_rank_first" in names and fires:
+        if il_active:
+            # The branch interleave already owns the critical rank's CTQ
+            # order; stacking the starved-chain interleave on top re-sorts
+            # it away from the branch-paired order (sweep: "all" trails
+            # "ratr+gmm_il" backward under concentrated hotspots).
+            t += _IL_LOSS * crit_cube_pool
+        elif starved:
+            # Lag-interleaving the dominant chain overlaps its consumer op
+            # with the tail of the producer chain (lag = 2 * pool width).
+            t -= (_CRIT_CHAIN_GAIN * crit_cube_pool
+                  * max(0.0, 1.0 - 2 * hw.num_aic / max(1, ctx.n_dom)))
+        elif not feats.hotspot:
+            # Comm hoist trades peer latency for straggler latency; on
+            # graded skew the peers' loss wins (sweep: skewed scenarios).
+            t += _CRIT_HOIST_LOSS * ctx.link_mean
+
+    return max(t, 0.0)
+
+
+def _candidate_cfgs(cfg: ScheduleConfig, starved: bool,
+                    allow_retile: bool) -> list[ScheduleConfig]:
+    """The gmm_m_split / gmm_split_mode budget grid, feature-pruned.
+
+    Re-tiling is only worth pricing when a starved hotspot chain exists
+    (finer tiles shrink the last-tile drain *and* give the starved-chain
+    interleave room); everywhere else the caller's tiling is kept, so
+    selection prices |SCHED_PIPELINES| candidates, not a cross product.
+    """
+    cfgs = [cfg]
+    if not allow_retile or not starved:
+        return cfgs
+    m2 = min(2 * max(1, cfg.gmm_m_split), 4 * 64)
+    if m2 > cfg.gmm_m_split:
+        # source_aligned boundaries are legal for arbitrary plans; a starved
+        # hotspot is by construction imbalanced, so never force "even".
+        cfgs.append(dataclasses.replace(cfg, gmm_m_split=m2,
+                                        gmm_split_mode="source_aligned"))
+    return cfgs
+
+
+@functools.lru_cache(maxsize=512)
+def _select(cfg: ScheduleConfig, direction: str, allow_retile: bool,
+            cost: CostModel) -> AutoChoice:
+    hw = cost.hw
+
+    # Starved-chain probe at the caller's tiling decides whether the
+    # budget grid is worth enumerating at all; its context is reused to
+    # price the un-retiled candidates (pipelines can't change it).
+    base_ctx = _price_context(cfg, direction, cost)
+    feats = base_ctx.feats
+    fires = base_ctx.ratio > CRIT_STRAGGLER_THRESHOLD and base_ctx.crit >= 0
+    starved = fires and base_ctx.n_other < hw.num_aic and feats.hotspot
+
+    scores: list[CandidateScore] = []
+    for cand_cfg in _candidate_cfgs(cfg, starved, allow_retile):
+        retiled = cand_cfg.gmm_m_split != cfg.gmm_m_split
+        ctx = (_price_context(cand_cfg, direction, cost) if retiled
+               else base_ctx)
+        for tag, spec in SCHED_PIPELINES.items():
+            names = tuple(spec)
+            if not fires and "critical_rank_first" in names:
+                # The pass is a gated no-op below the straggler threshold;
+                # pricing it would only duplicate its crit-less twin.
+                continue
+            label = f"{tag}:m{cand_cfg.gmm_m_split}" if retiled else tag
+            scores.append(CandidateScore(
+                tag=label, pipeline=Pipeline.of(*names), cfg=cand_cfg,
+                predicted_us=predict_makespan_us(cand_cfg, direction, names,
+                                                 cost, ctx=ctx)))
+    # Deterministic pick: predicted cost, then registry order (stable sort
+    # keeps the enumeration order for ties).
+    scores.sort(key=lambda s: s.predicted_us)
+    best = scores[0]
+    return AutoChoice(pipeline=best.pipeline, cfg=best.cfg,
+                      predicted_us=best.predicted_us, features=feats,
+                      scores=tuple(scores))
+
+
+def select(plan: Optional[RoutingPlan], cfg: ScheduleConfig,
+           cost_model: Optional[CostModel] = None, *,
+           direction: str = "forward",
+           allow_retile: bool = True) -> AutoChoice:
+    """Full selector output (choice + per-candidate score table).
+
+    ``plan`` overrides ``cfg``'s routing when given (the dropless path holds
+    plans, not configs). ``cost_model`` defaults to the compile-time
+    ``l2=False`` model the passes themselves use; a supplied model is
+    normalized to ``l2=False`` (no execution order exists yet, so there is
+    no residency to price).
+    """
+    if plan is not None and plan != cfg.routing:
+        cfg = dataclasses.replace(cfg, plan=plan)
+    cost = cost_model if cost_model is not None else CostModel(l2=False)
+    if cost.l2:
+        cost = dataclasses.replace(cost, l2=False)
+    if direction not in ("forward", "backward"):
+        raise ValueError(f"unknown direction {direction!r}")
+    return _select(cfg, direction, allow_retile, cost)
+
+
+def auto_pipeline(plan: Optional[RoutingPlan], cfg: ScheduleConfig,
+                  cost_model: Optional[CostModel] = None, *,
+                  direction: str = "forward",
+                  allow_retile: bool = True,
+                  ) -> tuple[Pipeline, ScheduleConfig]:
+    """Resolve ``pipeline="auto"``: the predicted-best (Pipeline, config).
+
+    Deterministic for equal plans, memoized on the hashable config.
+    ``allow_retile=False`` pins the tiling (used by ``compile_schedule``,
+    whose ODG task set is already built); the SSC cache resolves with the
+    full budget grid.
+    """
+    choice = select(plan, cfg, cost_model, direction=direction,
+                    allow_retile=allow_retile)
+    return choice.pipeline, choice.cfg
+
+
+def is_auto(pipeline) -> bool:
+    """True when ``pipeline`` is the literal auto-selection request."""
+    return isinstance(pipeline, str) and pipeline == AUTO
+
+
+def selection_cache_info():
+    """Memoization stats for the selector (monitoring / benchmarks)."""
+    return _select.cache_info()
+
+
+def selection_cache_clear() -> None:
+    _select.cache_clear()

@@ -137,6 +137,38 @@ class Pipeline:
 EMPTY_PIPELINE = Pipeline()
 
 
+# The canonical named-pipeline table: the variant space the hillclimb sweep
+# (``repro.launch.hillclimb --sched-sweep``), the cost-model-guided selector
+# (``core/autoselect.py``) and the docs all enumerate. One registry — a newly
+# registered pass joins sweep, selector and docs by adding one entry here.
+# Values are serializable pipeline specs (resolvable via ``Pipeline.of``).
+SCHED_PIPELINES: dict[str, tuple[str, ...]] = {
+    "naive": (),
+    "ratr": ("ratr",),
+    "ratr+gmm_il": ("ratr", "gmm_interleave"),
+    "ratr+crit": ("ratr", "critical_rank_first"),
+    "all": ("ratr", "gmm_interleave", "critical_rank_first"),
+}
+
+
+def pipeline_arg(spec: str):
+    """Map a CLI ``--sched`` string onto a pipeline request.
+
+    ``"auto"`` stays the literal auto-selection request (resolved by
+    ``compile_schedule`` / ``SSCCache`` against the actual plan); a
+    ``SCHED_PIPELINES`` name maps to its registered spec; anything else is
+    a comma-separated pass-name list, validated against the registry.
+    """
+    if spec == "auto":
+        return "auto"
+    if spec in SCHED_PIPELINES:
+        return SCHED_PIPELINES[spec]
+    names = tuple(s.strip() for s in spec.split(",") if s.strip())
+    for n in names:
+        get_pass(n)                 # fail fast on unknown names
+    return names
+
+
 def pipeline_from_flags(*, ratr: bool = False, gmm_interleave: bool = False,
                         chain_interleave: bool = False) -> Pipeline:
     """Map the seed's boolean kwargs onto the canonical equivalent pipeline.
@@ -165,6 +197,11 @@ def resolve_pipeline(pipeline=None, *, ratr: bool = False,
         if isinstance(pipeline, Pipeline):
             return pipeline
         if isinstance(pipeline, str):      # a single bare pass name
+            if pipeline == "auto":
+                raise ValueError(
+                    'pipeline="auto" must be resolved against a '
+                    "ScheduleConfig first (core/autoselect.auto_pipeline); "
+                    "compile_schedule and SSCCache do this for you")
             return Pipeline.of(pipeline)
         return Pipeline.of(*pipeline)
     return pipeline_from_flags(ratr=ratr, gmm_interleave=gmm_interleave,
@@ -176,6 +213,13 @@ def resolve_pipeline(pipeline=None, *, ratr: bool = False,
 # Implementations live in core/reorder.py; these wrappers own registration
 # and any direction gating.
 # ---------------------------------------------------------------------------
+
+# ``critical_rank_first`` fires above this compile-time straggler ratio.
+# One definition, three consumers: the pass wrapper below, the
+# implementation default (core/reorder.py), and the auto-selector's
+# fires/no-op gating (core/autoselect.py) — if they diverged, selection
+# would price a pass effect the real pass never applies.
+CRIT_STRAGGLER_THRESHOLD = 1.05
 
 @register_pass("ratr")
 def _pass_ratr(sched, cfg: ScheduleConfig) -> None:
@@ -199,7 +243,7 @@ def _pass_chain_interleave(sched, cfg: ScheduleConfig, *,
 
 @register_pass("critical_rank_first")
 def _pass_critical_rank_first(sched, cfg: ScheduleConfig, *,
-                              threshold: float = 1.05,
+                              threshold: float = CRIT_STRAGGLER_THRESHOLD,
                               lag: int = 0) -> None:
     from .reorder import apply_critical_rank_first
     apply_critical_rank_first(sched, cfg, threshold=threshold, lag=lag)

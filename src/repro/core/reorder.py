@@ -182,7 +182,7 @@ def apply_chain_interleave(sched, lag: int = 50) -> None:
 
 
 def apply_critical_rank_first(sched, cfg: ScheduleConfig, *,
-                              threshold: float = 1.05,
+                              threshold: float | None = None,
                               lag: int = 0) -> None:
     """Prioritize the compile-time critical rank (§4.5 extension).
 
@@ -213,6 +213,9 @@ def apply_critical_rank_first(sched, cfg: ScheduleConfig, *,
        *cost* throughput.
     """
     from .costmodel import CostModel
+    from .passes import CRIT_STRAGGLER_THRESHOLD
+    if threshold is None:
+        threshold = CRIT_STRAGGLER_THRESHOLD
     cost = CostModel(l2=False)
     ratio, crit = cost.critical_rank(sched)
     if crit < 0 or ratio <= threshold:

@@ -145,11 +145,24 @@ def compile_schedule(g: ODG, *, pipeline=None, ratr: bool = False,
     (``ratr=`` / ``gmm_interleave=`` / ``chain_interleave=``) are shimmed
     onto the equivalent canonical pipeline and compile byte-identical SSC
     blobs; they are mutually exclusive with ``pipeline``.
+
+    ``pipeline="auto"`` resolves through the cost-model-guided selector
+    (``core/autoselect.py``) against this graph's config and direction; the
+    *resolved* spec — never the literal ``"auto"`` — is what lands in
+    ``Schedule.opts`` (and hence the SSC blob). The tiling is pinned here
+    because the ODG's task set is already built; callers who want the
+    selector's ``gmm_m_split`` budget grid resolve before building the
+    graph (``SSCCache.get_or_compile`` does).
     """
     from .passes import resolve_pipeline
-    pipe = resolve_pipeline(pipeline, ratr=ratr,
-                            gmm_interleave=gmm_interleave,
-                            chain_interleave=chain_interleave)
+    from .autoselect import auto_pipeline, is_auto
+    if is_auto(pipeline):
+        pipe, _ = auto_pipeline(None, g.cfg, direction=g.direction,
+                                allow_retile=False)
+    else:
+        pipe = resolve_pipeline(pipeline, ratr=ratr,
+                                gmm_interleave=gmm_interleave,
+                                chain_interleave=chain_interleave)
 
     propagate_splits(g)
 

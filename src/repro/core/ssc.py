@@ -25,6 +25,13 @@ Cache keying and bucketing semantics
 
 Two properties follow:
 
+* **Resolved-``auto`` keying.** ``pipeline="auto"`` resolves through the
+  cost-model-guided selector (``core/autoselect.py``) *before* keying: the
+  key is built from the resolved pipeline spec and the (possibly re-tiled)
+  resolved config, never the literal ``"auto"``. An ``"auto"`` request and
+  the equivalent explicit request share one entry, and every cached blob
+  stays addressable by the spec that actually compiled it.
+
 * **Effective-routing keying.** The key uses ``cfg.routing`` — the plan
   that actually drives extents — so a ``ScheduleConfig(rows=r)`` balanced
   grid and an explicit ``RoutingPlan.balanced(ep, e_loc, r)`` share one
@@ -153,12 +160,32 @@ class SSCCache:
         self._step_snapshot = (0, 0, 0)
 
     @staticmethod
+    def _resolve(cfg: ScheduleConfig, direction: str, pipeline,
+                 opts: dict) -> tuple[ScheduleConfig, "object"]:
+        """Normalize (config, pipeline) — including ``pipeline="auto"``.
+
+        ``"auto"`` resolves through the cost-model-guided selector with the
+        full ``gmm_m_split`` budget grid: the returned config may carry a
+        re-tiled ``gmm_m_split``/``gmm_split_mode``, and the returned
+        pipeline is the resolved spec. Resolution is deterministic and
+        memoized, so an ``"auto"`` request and the equivalent explicit
+        request produce the same key — one cache entry (cache-hit parity).
+        """
+        from .autoselect import auto_pipeline, is_auto
+        if is_auto(pipeline):
+            pipe, cfg = auto_pipeline(None, cfg, direction=direction)
+            return cfg, pipe
+        return cfg, resolve_pipeline(pipeline, **opts)
+
+    @staticmethod
     def key(cfg: ScheduleConfig, direction: str, pipeline=None,
             **opts) -> tuple:
         # Key on the effective routing (cfg.routing), so an explicit
         # balanced plan and the equivalent scalar-rows config share one
         # entry; a fresh imbalanced router output compiles a fresh SSC.
-        pipe = resolve_pipeline(pipeline, **opts)
+        # ``pipeline="auto"`` is keyed by its *resolved* (config, spec) —
+        # cached schedules stay byte-addressable by what actually compiled.
+        cfg, pipe = SSCCache._resolve(cfg, direction, pipeline, opts)
         return (cfg.ep, cfg.e_loc, cfg.d_model, cfg.d_ff, cfg.dtype_bytes,
                 cfg.gmm_m_split, cfg.gmm_split_mode, cfg.routing.counts,
                 direction, pipe.key())
@@ -167,7 +194,7 @@ class SSCCache:
                        pipeline=None, **opts) -> Schedule:
         from .odg import build_moe_ffn_backward, build_moe_ffn_forward
         from .scheduler import compile_schedule
-        pipe = resolve_pipeline(pipeline, **opts)
+        cfg, pipe = self._resolve(cfg, direction, pipeline, opts)
         k = self.key(cfg, direction, pipeline=pipe)
         blob = self._cache.get(k)
         if blob is None:

@@ -47,15 +47,43 @@ class DroplessConfig:
     ``bucket_rows`` quantizes per-cell plan counts (1 = exact plans, every
     distinct routing compiles its own SSC). ``pipeline`` is a schedule-pass
     pipeline spec applied to both directions (direction-gated passes such as
-    ``gmm_interleave`` no-op on forward).
+    ``gmm_interleave`` no-op on forward) — or the string ``"auto"``, which
+    resolves per batch-plan and per direction through the cost-model-guided
+    selector (``core/autoselect.py``) inside ``SSCCache``: every batch gets
+    the predicted-best pipeline (and ``gmm_m_split`` budget) for its actual
+    routing, and bucketed plans memoize both the selection and the schedule.
     """
 
     ep: int = 1
     bucket_rows: int = 16
     gmm_m_split: int = 1
     gmm_split_mode: str = "source_aligned"
-    pipeline: tuple = ("ratr", "gmm_interleave")
+    pipeline: tuple | str = ("ratr", "gmm_interleave")
     cache_entries: int = 64
+
+    def __post_init__(self):
+        # Fail at construction, not at the first train step inside a jitted
+        # pure_callback: the only valid string is "auto" (SCHED_PIPELINES
+        # names like "ratr+crit" go through core.passes.pipeline_arg — the
+        # --sched CLI does), and bare pass names must be registered.
+        from repro.core.passes import get_pass
+        if isinstance(self.pipeline, str):
+            if self.pipeline != "auto":
+                raise ValueError(
+                    f"pipeline={self.pipeline!r}: the only string spec is "
+                    f'"auto"; for a named pipeline use '
+                    f"core.passes.pipeline_arg({self.pipeline!r}) or a "
+                    f"pass-name tuple")
+            return
+        for item in self.pipeline:
+            if isinstance(item, str):
+                get_pass(item)          # fail fast on unknown names
+
+    def pipeline_spec(self):
+        """The ``pipeline=`` argument for ``SSCCache``: ``"auto"`` or a
+        list spec."""
+        return self.pipeline if isinstance(self.pipeline, str) \
+            else list(self.pipeline)
 
 
 _PROCESS_CACHE: Optional[SSCCache] = None
@@ -159,7 +187,8 @@ def _exec_forward(dc: DroplessConfig, cache: SSCCache, mc,
     bridge = _bridge_of(dc, top_i, mc)
     plan = bridge.plan
     cfg = _schedule_cfg(dc, plan, d, f)
-    sched = cache.get_or_compile(cfg, "forward", pipeline=list(dc.pipeline))
+    sched = cache.get_or_compile(cfg, "forward",
+                                 pipeline=dc.pipeline_spec())
 
     x_src = bridge_dispatch(bridge, xt.reshape(dc.ep, T // dc.ep, d))
     st = ex.ExecutorState(cfg)
@@ -232,7 +261,7 @@ def _make_impl(dc: DroplessConfig, cache: SSCCache):
                 np.add.at(dy[s], r[valid], contrib[valid])
 
             sched = cache.get_or_compile(cfg, "backward",
-                                         pipeline=list(dc.pipeline))
+                                         pipeline=dc.pipeline_spec())
             st = ex.ExecutorState(cfg)
             ex.load_backward_state_plan(cfg, st, fwd, w1, w2, dy)
             ex.execute(sched, st, rng=np.random.default_rng(0))

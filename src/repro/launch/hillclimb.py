@@ -94,65 +94,14 @@ CELLS = {
     "llama_decode": ("llama3.2-3b", "decode_32k"),
 }
 
-# Schedule-level variant space: named pass pipelines (core/passes.py specs),
-# swept through the discrete-event simulator per routing scenario. This is
-# the §4.5 hypothesis → change → measure loop at the taskflow layer — the
-# old boolean-flag combinations are subsumed by pipeline specs, and any
-# newly registered pass joins the sweep by adding one line here.
-SCHED_PIPELINES = {
-    "naive": [],
-    "ratr": ["ratr"],
-    "ratr+gmm_il": ["ratr", "gmm_interleave"],
-    "ratr+crit": ["ratr", "critical_rank_first"],
-    "all": ["ratr", "gmm_interleave", "critical_rank_first"],
-}
-
-
-def sched_sweep(ep: int = 8, out: str | None = None) -> list[dict]:
-    """Hillclimb over schedule pass pipelines on skewed routing scenarios."""
-    from repro.core.odg import (ScheduleConfig, build_moe_ffn_backward,
-                                build_moe_ffn_forward)
-    from repro.core.routing import hotspot_plan, skewed_plan
-    from repro.core.scheduler import compile_schedule
-    from repro.core.simulator import simulate_unified
-
-    e_loc, rows = 8, 128
-    # Background traffic must fit each source's token budget at any --ep.
-    bg = max(0, min(16, ep * e_loc * rows // (ep * e_loc - 1) - (ep - 1)))
-    scenarios = [
-        ("balanced", None),
-        ("skewed", skewed_plan(ep, e_loc, rows, 1.0)),
-        ("hotspot", hotspot_plan(ep, e_loc, rows)),
-        ("hotspot_bg", hotspot_plan(ep, e_loc, rows, background=bg)),
-    ]
-    rows_out = []
-    for plan_name, plan in scenarios:
-        cfg = ScheduleConfig(ep=ep, e_loc=e_loc, rows=rows, d_model=2048,
-                             d_ff=512, gmm_m_split=8 * ep,
-                             gmm_split_mode="source_aligned", plan=plan)
-        for direction, builder in (("forward", build_moe_ffn_forward),
-                                   ("backward", build_moe_ffn_backward)):
-            base_us = None
-            for tag, pipeline in SCHED_PIPELINES.items():
-                sched = compile_schedule(builder(cfg), pipeline=pipeline)
-                res = simulate_unified(sched)
-                if base_us is None:
-                    base_us = res.makespan_us
-                row = {"plan": plan_name, "direction": direction,
-                       "pipeline": tag, "makespan_us": res.makespan_us,
-                       "vs_naive": base_us / res.makespan_us,
-                       "straggler": res.straggler_ratio,
-                       "mac_ratio": res.mac_ratio}
-                rows_out.append(row)
-                print(f"[sched {plan_name}/{direction}] {tag:12s} "
-                      f"makespan={res.makespan_us:9.1f}us "
-                      f"x{row['vs_naive']:.3f} vs naive "
-                      f"straggler={res.straggler_ratio:.2f} "
-                      f"mac={res.mac_ratio:.3f}")
-    if out:
-        with open(out, "w") as f:
-            json.dump(rows_out, f, indent=1)
-    return rows_out
+# The schedule-level variant space (named pass pipelines) and the sweep /
+# selector-report implementations live jax-free in core/passes.py and
+# launch/schedsweep.py; re-exported here for back-compat — any newly
+# registered pass joins sweep, selector and docs by adding one
+# core.passes.SCHED_PIPELINES entry.
+from repro.core.passes import SCHED_PIPELINES                   # noqa: E402,F401
+from repro.launch.schedsweep import (sched_sweep,               # noqa: E402,F401
+                                     selector_report)
 
 
 def main():
@@ -160,13 +109,21 @@ def main():
     ap.add_argument("--cell", choices=list(CELLS))
     ap.add_argument("--variants", default="baseline,opt")
     ap.add_argument("--sched-sweep", action="store_true",
-                    help="sweep SCHED_PIPELINES through the simulator "
-                         "instead of lowering a jax cell")
+                    help="sweep SCHED_PIPELINES (+ the auto selector) "
+                         "through the simulator instead of lowering a "
+                         "jax cell")
+    ap.add_argument("--selector-report", action="store_true",
+                    help="with --sched-sweep: dump the selector accuracy "
+                         "table (predicted vs simulated makespan for every "
+                         "priced candidate) instead of the pipeline table")
     ap.add_argument("--ep", type=int, default=8)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    if args.sched_sweep:
-        sched_sweep(ep=args.ep, out=args.out)
+    if args.sched_sweep or args.selector_report:
+        if args.selector_report:
+            selector_report(ep=args.ep, out=args.out)
+        else:
+            sched_sweep(ep=args.ep, out=args.out)
         return
     if args.cell is None:
         ap.error("--cell is required unless --sched-sweep is given")

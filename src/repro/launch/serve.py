@@ -21,6 +21,55 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def resolve_decode_sched(cfg, sched: str, n_slots: int):
+    """Size the decode-traffic MoE fragment's schedule for this server.
+
+    Decode batches are small and Zipf-skewed (a few hot experts dominate
+    short-request traffic), so the schedule that serves them best is a
+    routing-profile question — exactly what the cost-model-guided selector
+    answers. For MoE archs this compiles the decode-profile fragment with
+    ``--sched`` (``"auto"`` resolves through ``core/autoselect``), runs it
+    through the simulator, and reports the resolution; non-MoE archs have
+    no schedulable fragment and skip. Returns the report dict (or None).
+    """
+    if cfg.family != "moe":
+        print(f"--sched {sched}: {cfg.name!r} has no MoE fragment; "
+              f"scheduling stack not engaged")
+        return None
+    from repro.core.autoselect import select
+    from repro.core.odg import ScheduleConfig, build_moe_ffn_forward
+    from repro.core.passes import Pipeline, pipeline_arg
+    from repro.core.routing import skewed_plan
+    from repro.core.scheduler import compile_schedule
+    from repro.core.simulator import simulate_unified
+
+    mc = cfg.moe
+    ep = next(e for e in (4, 2, 1) if mc.e_total % e == 0)
+    e_loc = mc.e_total // ep
+    # Zipf-skewed decode profile sized to a busy step: every slot decodes
+    # one token routed top_k ways, batched over a scheduling window.
+    rows = max(1, n_slots * mc.top_k)
+    plan = skewed_plan(ep, e_loc, rows, 1.0)
+    scfg = ScheduleConfig(ep=ep, e_loc=e_loc, rows=0, d_model=cfg.d_model,
+                          d_ff=mc.d_expert, gmm_m_split=2 * ep,
+                          gmm_split_mode="source_aligned", plan=plan)
+    req = pipeline_arg(sched)
+    if req == "auto":
+        choice = select(plan, scfg, direction="forward")
+        pipe, scfg, tag = choice.pipeline, choice.cfg, choice.tag
+        predicted = choice.predicted_us
+    else:
+        pipe, tag, predicted = Pipeline.of(*req), sched, None
+    res = simulate_unified(compile_schedule(build_moe_ffn_forward(scfg),
+                                            pipeline=pipe))
+    pred = f" predicted={predicted:.1f}us" if predicted is not None else ""
+    print(f"decode schedule [{tag}] pipeline={pipe.names()} "
+          f"ep={ep} rows/cell={rows} simulated={res.makespan_us:.1f}us"
+          f"{pred} straggler={res.straggler_ratio:.2f}")
+    return {"tag": tag, "pipeline": pipe.spec(),
+            "makespan_us": res.makespan_us, "predicted_us": predicted}
+
+
 class ContinuousBatcher:
     """Fixed-slot continuous batching over a batched KV cache."""
 
@@ -114,11 +163,28 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--sched", default=None, metavar="PIPELINE",
+                    help="size the decode-traffic MoE fragment's schedule "
+                         "before serving: 'auto' (cost-model-guided "
+                         "selection), a core.passes.SCHED_PIPELINES name, "
+                         "or a comma-separated pass list")
     args = ap.parse_args()
+
+    if args.sched:
+        # Validate eagerly, for every arch: an unknown pipeline/pass name
+        # must be an argparse error, not a traceback (or a silent no-op on
+        # non-MoE archs).
+        from repro.core.passes import pipeline_arg
+        try:
+            pipeline_arg(args.sched)
+        except KeyError as e:
+            ap.error(str(e))
 
     from repro.configs import get_smoke_config
     from repro.models import model as M
     cfg = get_smoke_config(args.arch)
+    if args.sched:
+        resolve_decode_sched(cfg, args.sched, args.slots)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     prompts = {i: rng.integers(0, cfg.vocab, args.prompt_len)

@@ -39,6 +39,12 @@ def main(argv=None):
     ap.add_argument("--dropless-bucket", type=int, default=16,
                     help="shape-bucket size for plan row counts (1 = exact "
                          "plans, recompile on every routing change)")
+    ap.add_argument("--sched", default=None, metavar="PIPELINE",
+                    help="schedule-pass pipeline for the dropless path: "
+                         "'auto' (cost-model-guided selection per batch "
+                         "plan), a named core.passes.SCHED_PIPELINES entry "
+                         "(e.g. 'ratr+crit'), or a comma-separated pass "
+                         "list; default keeps the DroplessConfig default")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=8)
@@ -64,6 +70,7 @@ def main(argv=None):
     from repro.optim import adamw
     from repro.parallel.ep import EPConfig
 
+    from repro.core.passes import pipeline_arg as resolve_sched_arg
     from repro.launch.mesh import _axis_types_kw, mesh_context
 
     dims = [int(x) for x in args.mesh.split("x")]
@@ -86,12 +93,32 @@ def main(argv=None):
                          total_steps=args.steps)
     ep = (EPConfig(mode=args.ep_mode, capacity_factor=4.0)
           if cfg.family == "moe" else None)
+    sched_pipeline = None
+    if args.sched is not None:
+        # Validate eagerly: an unknown pass name must fail fast, and a
+        # --sched that cannot take effect must say so instead of silently
+        # training with defaults.
+        try:
+            sched_pipeline = resolve_sched_arg(args.sched)
+        except KeyError as e:
+            ap.error(str(e))
+        if not args.dropless:
+            ap.error("--sched only applies to the dropless scheduling path; "
+                     "add --dropless")
+        if cfg.family != "moe":
+            ap.error(f"--sched requires a MoE arch (got {args.arch!r}: "
+                     f"family={cfg.family!r})")
     dropless = None
     if args.dropless and cfg.family == "moe":
         from repro.launch.dropless import DroplessConfig
+        kw = {}
+        if sched_pipeline is not None:
+            kw["pipeline"] = sched_pipeline
         dropless = DroplessConfig(
             ep=args.dropless_ep or mesh.shape.get("model", 1),
-            bucket_rows=args.dropless_bucket)
+            bucket_rows=args.dropless_bucket, **kw)
+        if sched_pipeline is not None:
+            print(f"dropless schedule pipeline: {dropless.pipeline!r}")
     fns = St.make_steps(cfg, mesh, opt=oc, ep=ep, mode=args.mode,
                         dropless=dropless)
 

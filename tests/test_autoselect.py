@@ -1,0 +1,306 @@
+"""Cost-model-guided pipeline auto-selection: selector properties + the
+sweep-table regression gate.
+
+Two layers of defense:
+
+* Properties (hypothesis when installed, the seeded ``_proptest`` fallback
+  otherwise) over random skewed / sparse / hotspot / diagonal RoutingPlans:
+  the selector never returns a spec it prices worse than the empty
+  pipeline, equal plans resolve deterministically, and an ``"auto"`` SSC
+  key equals its resolved spec's key (cache-hit parity).
+* A fixture-sized ``--sched-sweep`` run asserted end-to-end through the
+  simulator: scenario and pipeline names are locked (registry drift fails
+  loudly), ``critical_rank_first`` still wins the hotspot scenario, the
+  ``auto`` row lands within tolerance of the per-scenario best fixed
+  pipeline everywhere, and strictly beats the fixed ``"all"`` pipeline on
+  the hotspot.
+"""
+
+import numpy as np
+import pytest
+
+from _proptest import given, settings, st
+
+from repro.core import executor as ex
+from repro.core.autoselect import (auto_pipeline, plan_features,
+                                   predict_makespan_us, select)
+from repro.core.odg import ScheduleConfig, build_moe_ffn_forward
+from repro.core.passes import SCHED_PIPELINES, Pipeline, pipeline_arg
+from repro.core.routing import (RoutingPlan, hotspot_plan, random_plan,
+                                skewed_plan)
+from repro.core.scheduler import compile_schedule, validate_schedule
+from repro.core.ssc import SSCCache
+
+# Tolerance of the sweep gate: auto must land within this factor of the
+# best fixed pipeline on every (scenario, direction) — the acceptance bar.
+SWEEP_TOL = 1.05
+
+directions = st.sampled_from(["forward", "backward"])
+
+
+def _diagonal_plan(ep: int, e_loc: int, rows: int) -> RoutingPlan:
+    """Every source keeps its tokens local — zero cross-rank cells."""
+    counts = np.zeros((ep, ep, e_loc), dtype=np.int64)
+    for s in range(ep):
+        counts[s, s, :] = rows
+    return RoutingPlan.from_counts(counts)
+
+
+def _random_case(seed: int, kind: str):
+    rng = np.random.default_rng(seed)
+    ep, e_loc = int(rng.integers(2, 5)), int(rng.integers(1, 4))
+    if kind == "skewed":
+        plan = skewed_plan(ep, e_loc, int(rng.integers(1, 9)),
+                           float(rng.uniform(0, 2.5)))
+    elif kind == "sparse":
+        plan = random_plan(ep, e_loc, 7, rng, p_zero=0.4)
+    elif kind == "diagonal":
+        plan = _diagonal_plan(ep, e_loc, int(rng.integers(1, 9)))
+    else:
+        plan = hotspot_plan(ep, e_loc, int(rng.integers(2, 9)))
+    m_split = int(rng.choice([1, 2, 4]))
+    cfg = ScheduleConfig(ep=ep, e_loc=e_loc, rows=0, d_model=16, d_ff=8,
+                         gmm_m_split=m_split,
+                         gmm_split_mode="source_aligned", plan=plan)
+    return plan, cfg
+
+
+# ---------------------------------------------------------------------------
+# Selector properties.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from(["skewed", "sparse", "hotspot", "diagonal"]),
+       directions)
+def test_auto_never_worse_than_empty_pipeline(seed, kind, direction):
+    """The pick's predicted makespan never exceeds the empty pipeline's at
+    the caller's tiling — 'naive' is always in the candidate set, so a
+    pruning bug that loses it (or a pricing bug that inflates the pick)
+    fails here."""
+    plan, cfg = _random_case(seed, kind)
+    choice = select(plan, cfg, direction=direction)
+    naive_us = predict_makespan_us(cfg, direction, ())
+    assert choice.predicted_us <= naive_us + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from(["skewed", "sparse", "hotspot", "diagonal"]),
+       directions)
+def test_auto_is_deterministic_for_equal_plans(seed, kind, direction):
+    """Equal plans (fresh objects, equal counts) resolve identically — an
+    SSC-cache invariant: per-batch auto selection must not fragment keys."""
+    plan, cfg = _random_case(seed, kind)
+    pipe1, cfg1 = auto_pipeline(plan, cfg, direction=direction)
+    # A fresh, structurally equal plan in a fresh, structurally equal cfg.
+    plan2 = RoutingPlan.from_counts(np.asarray(plan.counts))
+    cfg2 = ScheduleConfig(ep=cfg.ep, e_loc=cfg.e_loc, rows=0,
+                          d_model=cfg.d_model, d_ff=cfg.d_ff,
+                          gmm_m_split=cfg.gmm_m_split,
+                          gmm_split_mode=cfg.gmm_split_mode, plan=plan2)
+    pipe2, cfg2r = auto_pipeline(plan2, cfg2, direction=direction)
+    assert pipe1 == pipe2
+    assert cfg1 == cfg2r
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from(["skewed", "sparse", "hotspot", "diagonal"]),
+       directions)
+def test_ssc_key_parity_for_auto(seed, kind, direction):
+    """``SSCCache.key(cfg, dir, pipeline="auto")`` equals the key of its
+    resolved (pipeline, config) — an auto request and the equivalent
+    explicit request share one cache entry."""
+    plan, cfg = _random_case(seed, kind)
+    pipe, rcfg = auto_pipeline(plan, cfg, direction=direction)
+    k_auto = SSCCache.key(cfg, direction, pipeline="auto")
+    k_resolved = SSCCache.key(rcfg, direction, pipeline=pipe)
+    assert k_auto == k_resolved
+    # And the resolved key never contains the literal request string.
+    assert "auto" not in repr(k_auto)
+
+
+def test_auto_requests_share_one_cache_entry():
+    plan = hotspot_plan(4, 2, 8)
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=32, d_ff=16,
+                         gmm_m_split=4, gmm_split_mode="source_aligned",
+                         plan=plan)
+    pipe, rcfg = auto_pipeline(plan, cfg, direction="forward")
+    cache = SSCCache()
+    cache.get_or_compile(cfg, "forward", pipeline="auto")
+    cache.get_or_compile(rcfg, "forward", pipeline=pipe)
+    cache.get_or_compile(cfg, "forward", pipeline="auto")
+    assert cache.misses == 1 and cache.hits == 2
+
+
+def test_compile_schedule_auto_resolves_and_pins_tiling():
+    """``compile_schedule(pipeline="auto")`` resolves through the selector
+    but never re-tiles (the ODG's task set is already built); the resolved
+    spec — not "auto" — lands in ``Schedule.opts``."""
+    plan = hotspot_plan(4, 2, 8)
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=32, d_ff=16,
+                         gmm_m_split=4, gmm_split_mode="source_aligned",
+                         plan=plan)
+    s = compile_schedule(build_moe_ffn_forward(cfg), pipeline="auto")
+    validate_schedule(s)
+    names = Pipeline.from_spec(s.opts["pipeline"]).names()
+    assert "auto" not in names
+    registered = {n for spec in SCHED_PIPELINES.values() for n in spec}
+    assert set(names) <= registered
+    # Tiling pinned: same task count as an explicit compile at cfg.
+    s_explicit = compile_schedule(build_moe_ffn_forward(cfg))
+    assert s.n_tasks == s_explicit.n_tasks
+
+
+def test_auto_schedule_executes_bit_correct():
+    """An auto-resolved (possibly re-tiled) schedule from the cache still
+    matches the monolithic reference — what the dropless path relies on."""
+    plan = hotspot_plan(4, 2, 8, background=2)
+    cfg = ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=16, d_ff=8,
+                         gmm_m_split=4, gmm_split_mode="source_aligned",
+                         plan=plan)
+    sched = SSCCache().get_or_compile(cfg, "forward", pipeline="auto")
+    x_src, w1, w2 = ex.make_inputs_plan(cfg, 5)
+    state = ex.ExecutorState(cfg)
+    ex.load_forward_state_plan(cfg, state, x_src, w1, w2)
+    ex.execute(sched, state, rng=np.random.default_rng(5))
+    ref = ex.reference_forward_plan(cfg, x_src, w1, w2)
+    for r in range(cfg.ep):
+        if plan.send_rows(r):
+            np.testing.assert_allclose(state.get("y_ret", r),
+                                       ref["y_ret"][r], rtol=1e-5, atol=1e-5)
+
+
+def test_selection_is_fast_and_memoized():
+    """Selection stays O(ms) — it must not eat the compile-time win."""
+    import time
+    from repro.core.autoselect import selection_cache_clear
+    plan = skewed_plan(8, 8, 128, 1.0)
+    cfg = ScheduleConfig(ep=8, e_loc=8, rows=0, d_model=2048, d_ff=512,
+                         gmm_m_split=64, gmm_split_mode="source_aligned",
+                         plan=plan)
+    selection_cache_clear()
+    t0 = time.perf_counter()
+    select(plan, cfg, direction="forward")
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    select(plan, cfg, direction="forward")
+    warm_ms = (time.perf_counter() - t0) * 1e3
+    assert cold_ms < 250.0, f"cold selection took {cold_ms:.1f}ms"
+    assert warm_ms < cold_ms and warm_ms < 5.0
+
+
+def test_pipeline_arg_mapping():
+    assert pipeline_arg("auto") == "auto"
+    assert pipeline_arg("ratr+crit") == SCHED_PIPELINES["ratr+crit"]
+    assert pipeline_arg("ratr,gmm_interleave") == ("ratr", "gmm_interleave")
+    with pytest.raises(KeyError, match="unknown schedule pass"):
+        pipeline_arg("definitely_not_a_pass")
+
+
+def test_dropless_config_carries_auto_through():
+    """The dropless path hands ``"auto"`` to the SSC cache verbatim (per
+    batch-plan, per direction) instead of exploding it into characters."""
+    from repro.launch.dropless import DroplessConfig
+    dc = DroplessConfig(pipeline="auto")
+    assert dc.pipeline_spec() == "auto"
+    assert DroplessConfig().pipeline_spec() == ["ratr", "gmm_interleave"]
+
+
+def test_plan_features_profiles():
+    hot = plan_features(hotspot_plan(8, 2, 16))
+    assert hot.hotspot and hot.conc > 0.9 and hot.skew > 4
+    bal = plan_features(RoutingPlan.balanced(4, 2, 8))
+    assert bal.balanced and not bal.hotspot and bal.sparsity == 0.0
+    sk = plan_features(skewed_plan(4, 2, 8, 1.5))
+    assert not sk.balanced and sk.expert_skew > 1.25
+
+
+# ---------------------------------------------------------------------------
+# Sweep-table regression gate (fixture-sized --sched-sweep, simulated).
+# ---------------------------------------------------------------------------
+
+FIXTURE_SWEEP = dict(ep=8, e_loc=2, rows=256, d_model=1024, d_ff=512,
+                     gmm_m_split=64)
+
+
+@pytest.fixture(scope="module")
+def sweep_rows():
+    from repro.launch.schedsweep import sched_sweep
+    return sched_sweep(quiet=True, **FIXTURE_SWEEP)
+
+
+def _table(rows):
+    out = {}
+    for r in rows:
+        out[(r["plan"], r["direction"], r["pipeline"])] = r
+    return out
+
+
+def test_sweep_names_locked(sweep_rows):
+    """Scenario and pipeline names are the public sweep contract — silent
+    registry drift (a renamed pass, a dropped scenario) fails loudly."""
+    assert set(SCHED_PIPELINES) == {"naive", "ratr", "ratr+gmm_il",
+                                    "ratr+crit", "all"}
+    scenarios = {r["plan"] for r in sweep_rows}
+    assert scenarios == {"balanced", "skewed", "hotspot", "hotspot_bg"}
+    pipelines = {r["pipeline"] for r in sweep_rows}
+    assert pipelines == set(SCHED_PIPELINES) | {"auto"}
+    for (plan, direction) in {(r["plan"], r["direction"])
+                              for r in sweep_rows}:
+        present = {r["pipeline"] for r in sweep_rows
+                   if (r["plan"], r["direction"]) == (plan, direction)}
+        assert present == pipelines, f"missing rows in {plan}/{direction}"
+
+
+def test_crit_first_still_wins_hotspot(sweep_rows):
+    """The straggler-aware pass keeps its headline win: best fixed pipeline
+    on the concentrated-hotspot forward scenario, strictly ahead of every
+    crit-less pipeline."""
+    t = _table(sweep_rows)
+    crit = t[("hotspot", "forward", "ratr+crit")]["makespan_us"]
+    for tag in SCHED_PIPELINES:
+        other = t[("hotspot", "forward", tag)]["makespan_us"]
+        assert crit <= other + 1e-9, f"{tag} beats ratr+crit on hotspot"
+        if "critical_rank_first" not in SCHED_PIPELINES[tag]:
+            assert crit < other, f"no win over crit-less {tag}"
+
+
+def test_auto_within_tolerance_of_best_fixed(sweep_rows):
+    """The acceptance bar: on every (scenario, direction) the auto row's
+    simulated makespan is within SWEEP_TOL of the best fixed pipeline."""
+    t = _table(sweep_rows)
+    for (plan, direction) in {(r["plan"], r["direction"])
+                              for r in sweep_rows}:
+        best_fixed = min(t[(plan, direction, tag)]["makespan_us"]
+                         for tag in SCHED_PIPELINES)
+        auto = t[(plan, direction, "auto")]["makespan_us"]
+        assert auto <= best_fixed * SWEEP_TOL, (
+            f"auto {auto:.1f}us vs best fixed {best_fixed:.1f}us on "
+            f"{plan}/{direction} "
+            f"(resolved: {t[(plan, direction, 'auto')]['resolved']})")
+
+
+def test_auto_strictly_beats_all_on_hotspot(sweep_rows):
+    """Auto must out-schedule the fixed kitchen-sink pipeline somewhere —
+    the hotspot, where the selector's budget grid and its crit/interleave
+    conflict pricing both pay off."""
+    t = _table(sweep_rows)
+    wins = [d for d in ("forward", "backward")
+            if t[("hotspot", d, "auto")]["makespan_us"]
+            < t[("hotspot", d, "all")]["makespan_us"]]
+    assert wins, "auto never strictly beats 'all' on the hotspot scenario"
+
+
+def test_auto_rows_record_resolution(sweep_rows):
+    """Every auto row carries its resolved spec + compile-time prediction —
+    the sweep table doubles as the selector's provenance log."""
+    for r in sweep_rows:
+        if r["pipeline"] != "auto":
+            continue
+        assert r["resolved"], r
+        assert "auto" not in Pipeline.from_spec(r["resolved_spec"]).names()
+        assert r["predicted_us"] >= 0.0
+        # The budget grid only ever refines tiling, never coarsens it.
+        assert r["resolved_m_split"] >= FIXTURE_SWEEP["gmm_m_split"]
