@@ -1,0 +1,67 @@
+"""Decode-trace replay smoke — bounded ragged-EP retraces under bucketing.
+
+Drives ``repro.launch.replay`` end-to-end at CI scale: churned decode
+traces (stationary ``uniform`` plus the batch-size-bursting ``bursty``
+profile) replayed through plan compilation, the SSC cache, and the
+simulator, per bucket policy. The asserted contract is the ragged-EP
+story: chunk caps are static jit constants, so an **exact** plan retraces
+``make_moe_ep(plan=...)`` on nearly every batch, while a bucketed plan's
+caps collapse onto the policy's rungs — on a stationary profile the
+fitted ladder's distinct cap tuples stay within its rung count (+1 for
+the cold start), and even under batch-size bursts the retrace count stays
+far below step count.
+"""
+
+from __future__ import annotations
+
+from repro.core.buckets import BucketSpec, fit_ladder
+from repro.launch.replay import exact_plans, replay_trace, synth_trace
+from repro.models.moe import MoEConfig
+
+from .common import emit
+
+EP, E_LOC, T_LOC, TOP_K, STEPS = 4, 2, 48, 2, 20
+D_MODEL, D_FF = 64, 32
+
+MC = MoEConfig(n_experts=EP * E_LOC, top_k=TOP_K, d_expert=D_FF)
+
+
+def _trace(profile: str, seed: int):
+    return synth_trace(profile, STEPS, ep=EP, e_loc=E_LOC, t_loc=T_LOC,
+                       top_k=TOP_K, seed=seed)
+
+
+def run() -> None:
+    for profile in ("uniform", "bursty"):
+        fitted = fit_ladder(exact_plans(_trace(profile, 1), MC, EP),
+                            4, split_penalty=1.0)
+        policies = {"exact": BucketSpec.exact(),
+                    "linear16": BucketSpec.linear(16),
+                    "fitted": fitted}
+        rows = {r["policy"]: r for r in replay_trace(
+            _trace(profile, 0), MC, EP, policies, d_model=D_MODEL,
+            d_ff=D_FF, simulate=True)}
+        for name, r in rows.items():
+            emit(f"replay_{profile}_{name}", r["fetch_us_mean"],
+                 f"hit_rate={r['hit_rate']:.2f} "
+                 f"pad={r['pad_ratio']:.2f}x "
+                 f"retraces={r['ep_retraces']}/{r['steps']} "
+                 f"p50={r['p50_us']:.1f}us p99={r['p99_us']:.1f}us "
+                 f"spec={r['spec']}")
+
+        exact, fit_row = rows["exact"], rows["fitted"]
+        assert exact["ep_retraces"] >= 0.9 * STEPS, (
+            f"{profile}: exact plans should retrace nearly every batch "
+            f"({exact['ep_retraces']}/{STEPS})")
+        assert fit_row["ep_retraces"] < exact["ep_retraces"] / 2, (
+            f"{profile}: bucketed retraces must be bounded "
+            f"({fit_row['ep_retraces']} vs {exact['ep_retraces']})")
+        if profile != "bursty":        # bursts legitimately resize caps
+            n_rungs = len(fitted.edges)
+            assert fit_row["ep_retraces"] <= n_rungs + 1, (
+                f"{profile}: stationary-profile retraces must stay within "
+                f"the ladder ({fit_row['ep_retraces']} > {n_rungs} + 1)")
+
+
+if __name__ == "__main__":
+    run()

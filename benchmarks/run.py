@@ -26,8 +26,10 @@ SECTIONS = [
      "benchmarks.bench_autoselect"),
     ("imbalance", "Routing-skew sweep: unified vs baseline under load skew",
      "benchmarks.bench_imbalance"),
-    ("dropless", "Dropless plan-keyed schedule reuse: exact vs bucketed",
+    ("dropless", "Dropless plan-keyed schedule reuse per bucket policy",
      "benchmarks.bench_dropless"),
+    ("replay", "Decode-trace replay: bucket policies under serving traffic",
+     "benchmarks.bench_replay"),
     ("ep_modes", "EP mode comparison on the JAX system",
      "benchmarks.bench_ep_modes"),
     ("roofline", "TPU roofline table from the dry-run",

@@ -137,12 +137,24 @@ class ScheduleConfig:
     gmm_split_mode: str = "even"
     # Imbalanced routing plan; None means the balanced grid from ``rows``.
     plan: Optional[RoutingPlan] = None
+    # Quantization provenance of ``plan``: the canonical key tuple of the
+    # repro.core.buckets.BucketSpec the plan's counts were quantized with
+    # (None = unbucketed/exact). Part of the SSC cache key, so schedules
+    # compiled under different bucket policies never alias even when two
+    # policies happen to map one batch to the same counts; recorded in
+    # Schedule.opts / the SSC blob for provenance. Any BucketSpec /
+    # int / str / spec form normalizes to the key tuple at construction.
+    bucket: Optional[tuple] = None
 
     def __post_init__(self):
         if self.gmm_split_mode not in ("even", "source_aligned"):
             raise ValueError(
                 f"gmm_split_mode must be 'even' or 'source_aligned', "
                 f"got {self.gmm_split_mode!r}")
+        if self.bucket is not None:
+            from .buckets import BucketSpec
+            object.__setattr__(self, "bucket",
+                               BucketSpec.from_any(self.bucket).key())
         if self.plan is not None and (self.plan.ep != self.ep
                                       or self.plan.e_loc != self.e_loc):
             raise ValueError(

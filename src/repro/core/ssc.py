@@ -21,9 +21,10 @@ Cache keying and bucketing semantics
     (ep, e_loc, d_model, d_ff, dtype_bytes,
      gmm_m_split, gmm_split_mode,
      cfg.routing.counts,          # the full per-(src, dst, expert) matrix
+     cfg.bucket,                  # BucketSpec.key() provenance (or None)
      direction, pipeline.key())
 
-Two properties follow:
+Three properties follow:
 
 * **Resolved-``auto`` keying.** ``pipeline="auto"`` resolves through the
   cost-model-guided selector (``core/autoselect.py``) *before* keying: the
@@ -41,20 +42,33 @@ Two properties follow:
   and share one entry.
 
 * **Bucketed-plan keys.** The dropless training path never inserts exact
-  per-batch plans directly: ``models.moe.plan_from_routing(bucket_rows=b)``
-  quantizes each nonzero cell count up to a multiple of ``b`` (empty cells
-  stay empty, preserving task-graph sparsity) *before* the plan reaches the
-  cache, so every batch whose counts land in the same buckets maps to the
-  same ``cfg.routing.counts`` tuple — one key, one compile. Padding rows
-  are zero-filled in the executor's send buffers and provably do not change
-  results (zeros propagate through GMM/SwiGLU and are never gathered by
-  Combine). ``bucket_rows=1`` keys exact plans: every distinct routing is
-  a miss, which is the recompile-rate baseline ``bench_dropless`` measures.
+  per-batch plans directly:
+  ``models.moe.plan_from_routing(bucket=BucketSpec...)`` quantizes each
+  nonzero cell count up to its policy bucket — ``linear(rows)`` (the legacy
+  ``bucket_rows`` int shim, key-identical by construction),
+  ``geometric(base)``, or a fitted ``ladder(edges)`` (see
+  ``repro.core.buckets``) — *before* the plan reaches the cache, so every
+  batch whose counts land in the same buckets maps to the same
+  ``cfg.routing.counts`` tuple — one key, one compile. ``cfg.bucket``
+  carries the spec's canonical ``key()`` tuple into the cache key (so two
+  policies that happen to map one batch to the same counts still never
+  alias) and ``get_or_compile`` records it in ``Schedule.opts["bucket"]``
+  / the blob for provenance. Padding rows are zero-filled in the
+  executor's send buffers and provably do not change results (zeros
+  propagate through GMM/SwiGLU and are never gathered by Combine). Exact
+  plans (``bucket_rows=1`` / ``BucketSpec.exact()``) key every distinct
+  routing as a miss — the recompile-rate baseline ``bench_dropless``
+  measures.
 
 ``info()`` reports cumulative ``hits``/``misses``/``evictions`` plus
 occupancy; ``step_stats()`` returns the *deltas* since its previous call —
 the per-training-step recompile counters the dropless step surfaces in its
-metrics dict.
+metrics dict. Consumers that bucket plans additionally report the rows
+they padded (``record_rows``): ``info()``/``step_stats()`` then carry a
+cumulative / per-step ``pad_ratio`` (bucketed plan rows / exact routed
+rows, 1.0 = no padding), so bucket policies are comparable straight from
+the ``ssc_*`` train metrics next to the hit/miss counters they trade
+against.
 """
 
 from __future__ import annotations
@@ -157,7 +171,12 @@ class SSCCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
-        self._step_snapshot = (0, 0, 0)
+        # Padded-vs-exact row accounting (reported by bucketing consumers
+        # via record_rows; the cache only ever sees bucketed plans, so it
+        # cannot derive the exact rows itself).
+        self.exact_rows = 0
+        self.padded_rows = 0
+        self._step_snapshot = (0, 0, 0, 0, 0)
 
     @staticmethod
     def _resolve(cfg: ScheduleConfig, direction: str, pipeline,
@@ -188,7 +207,7 @@ class SSCCache:
         cfg, pipe = SSCCache._resolve(cfg, direction, pipeline, opts)
         return (cfg.ep, cfg.e_loc, cfg.d_model, cfg.d_ff, cfg.dtype_bytes,
                 cfg.gmm_m_split, cfg.gmm_split_mode, cfg.routing.counts,
-                direction, pipe.key())
+                cfg.bucket, direction, pipe.key())
 
     def get_or_compile(self, cfg: ScheduleConfig, direction: str,
                        pipeline=None, **opts) -> Schedule:
@@ -202,6 +221,12 @@ class SSCCache:
             builder = (build_moe_ffn_forward if direction == "forward"
                        else build_moe_ffn_backward)
             sched = compile_schedule(builder(cfg), pipeline=pipe)
+            if cfg.bucket is not None:
+                # Provenance: the blob records which quantization policy
+                # shaped its plan, next to the pipeline spec that shaped
+                # its queues (msgpack-safe list form of BucketSpec.key()).
+                from .buckets import BucketSpec
+                sched.opts["bucket"] = BucketSpec.from_any(cfg.bucket).spec()
             blob = schedule_to_ssc(sched)
             self._cache[k] = blob
             while len(self._cache) > self.max_entries:
@@ -212,6 +237,26 @@ class SSCCache:
             self._cache.move_to_end(k)
         return ssc_to_schedule(blob)
 
+    def record_rows(self, exact_rows: int, padded_rows: int) -> None:
+        """Accumulate one bucketed plan's padded-vs-exact row accounting.
+
+        Called by consumers that quantize plans before keying (the dropless
+        bridge, the replay harness): ``exact_rows`` is the batch's routed
+        row count, ``padded_rows`` the bucketed plan's total rows. The
+        cumulative ratio surfaces in ``info()``/``step_stats()`` so bucket
+        policies are comparable straight from the ``ssc_*`` train metrics.
+        """
+        if padded_rows < exact_rows:
+            raise ValueError(
+                f"padded_rows={padded_rows} < exact_rows={exact_rows}: "
+                f"bucketed plans must cover the exact plan")
+        self.exact_rows += int(exact_rows)
+        self.padded_rows += int(padded_rows)
+
+    @staticmethod
+    def _pad_ratio(padded: int, exact: int) -> float:
+        return padded / exact if exact else 1.0
+
     def info(self) -> dict:
         """Occupancy + counter snapshot (for logs and capacity planning)."""
         return {
@@ -221,6 +266,9 @@ class SSCCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "exact_rows": self.exact_rows,
+            "padded_rows": self.padded_rows,
+            "pad_ratio": self._pad_ratio(self.padded_rows, self.exact_rows),
         }
 
     def step_stats(self) -> dict:
@@ -229,9 +277,11 @@ class SSCCache:
         The dropless training step calls this once per executed step to
         surface per-step recompile counts in its metrics dict; ``misses``
         is the number of schedules compiled during the step (0 on a fully
-        cache-served step).
+        cache-served step). ``pad_ratio`` is the padded-vs-exact row ratio
+        of the plans recorded *during the step* (1.0 when none were).
         """
-        cur = (self.hits, self.misses, self.evictions)
+        cur = (self.hits, self.misses, self.evictions,
+               self.exact_rows, self.padded_rows)
         last = self._step_snapshot
         self._step_snapshot = cur
         return {
@@ -239,4 +289,5 @@ class SSCCache:
             "misses": cur[1] - last[1],
             "evictions": cur[2] - last[2],
             "entries": len(self._cache),
+            "pad_ratio": self._pad_ratio(cur[4] - last[4], cur[3] - last[3]),
         }

@@ -11,10 +11,13 @@ schedule is fetched from — or compiled into — a process-level
 executed instead of the fixed-capacity one.
 
 Because a fresh imbalanced plan would recompile every step, plans are
-*shape-bucketed* first (``bucket_rows``: per-cell counts quantize up to a
-bucket multiple, padding rows stay zero) so that batch-to-batch routing
+*shape-bucketed* first (``bucket``: a ``repro.core.buckets.BucketSpec``
+quantizing per-cell counts up to policy buckets — linear, geometric, or a
+fitted ladder — padding rows stay zero) so that batch-to-batch routing
 jitter maps to a stable cache key; ``bench_dropless`` measures the
-recompile-rate difference between exact and bucketed keys.
+recompile-rate and padded-row difference between exact and bucketed keys
+per policy, and the per-step ``ssc_pad_ratio`` metric reports what the
+active policy costs.
 
 Integration is the same pluggable ``moe_impl(params, x, mc)`` seam the EP
 path uses: the router (and therefore the gradient into router weights) runs
@@ -44,8 +47,15 @@ class DroplessConfig:
     ``ep`` is the size of the *compiled* EP group: tokens are split
     contiguously over ``ep`` virtual source ranks and experts over ``ep``
     expert shards, matching the fragment the scheduling stack compiles.
-    ``bucket_rows`` quantizes per-cell plan counts (1 = exact plans, every
-    distinct routing compiles its own SSC). ``pipeline`` is a schedule-pass
+    ``bucket`` quantizes per-cell plan counts into shape buckets: a
+    :class:`repro.core.buckets.BucketSpec` or anything
+    ``BucketSpec.from_any`` accepts (``"geometric:8"``, a fitted ladder,
+    an int). ``bucket_rows`` is the deprecated linear-bucket int shim —
+    ``DroplessConfig(bucket_rows=r)`` and
+    ``DroplessConfig(bucket=BucketSpec.linear(r))`` produce SSC-key
+    identical schedules (``bucket`` wins when both are given; 1 = exact
+    plans, every distinct routing compiles its own SSC).
+    ``pipeline`` is a schedule-pass
     pipeline spec applied to both directions (direction-gated passes such as
     ``gmm_interleave`` no-op on forward) — or the string ``"auto"``, which
     resolves per batch-plan and per direction through the cost-model-guided
@@ -55,17 +65,28 @@ class DroplessConfig:
     """
 
     ep: int = 1
-    bucket_rows: int = 16
+    bucket_rows: int = 16            # deprecated: use bucket=
+    bucket: object = None            # BucketSpec | int | str | key tuple
     gmm_m_split: int = 1
     gmm_split_mode: str = "source_aligned"
     pipeline: tuple | str = ("ratr", "gmm_interleave")
     cache_entries: int = 64
 
+    def bucket_spec(self):
+        """The effective :class:`~repro.core.buckets.BucketSpec` —
+        ``bucket`` when given, else the legacy linear ``bucket_rows``."""
+        from repro.core.buckets import BucketSpec, normalize_bucket
+        if self.bucket is not None:
+            return normalize_bucket(self.bucket)
+        return BucketSpec.linear(self.bucket_rows)
+
     def __post_init__(self):
         # Fail at construction, not at the first train step inside a jitted
         # pure_callback: the only valid string is "auto" (SCHED_PIPELINES
         # names like "ratr+crit" go through core.passes.pipeline_arg — the
-        # --sched CLI does), and bare pass names must be registered.
+        # --sched CLI does), bare pass names must be registered, and the
+        # bucket spec must parse.
+        self.bucket_spec()
         from repro.core.passes import get_pass
         if isinstance(self.pipeline, str):
             if self.pipeline != "auto":
@@ -117,7 +138,8 @@ class DroplessMoE:
             dc.cache_entries)
         self.impl = _make_impl(dc, self.cache)
         info = self.cache.info()
-        self._snapshot = (info["hits"], info["misses"], info["evictions"])
+        self._snapshot = (info["hits"], info["misses"], info["evictions"],
+                          info["exact_rows"], info["padded_rows"])
 
     def step_stats(self) -> dict:
         """Cache counter deltas since this handle's previous call.
@@ -130,11 +152,14 @@ class DroplessMoE:
         model its own ``SSCCache`` when per-model attribution matters.
         """
         info = self.cache.info()
-        cur = (info["hits"], info["misses"], info["evictions"])
+        cur = (info["hits"], info["misses"], info["evictions"],
+               info["exact_rows"], info["padded_rows"])
         last = self._snapshot
         self._snapshot = cur
+        d_exact, d_pad = cur[3] - last[3], cur[4] - last[4]
         return {"hits": cur[0] - last[0], "misses": cur[1] - last[1],
-                "evictions": cur[2] - last[2], "entries": info["entries"]}
+                "evictions": cur[2] - last[2], "entries": info["entries"],
+                "pad_ratio": d_pad / d_exact if d_exact else 1.0}
 
 
 def make_moe_dropless(model_cfg, dc: DroplessConfig,
@@ -159,13 +184,21 @@ def _schedule_cfg(dc: DroplessConfig, plan, d_model: int,
     return ScheduleConfig(ep=dc.ep, e_loc=plan.e_loc, rows=0,
                           d_model=d_model, d_ff=d_ff,
                           gmm_m_split=dc.gmm_m_split,
-                          gmm_split_mode=dc.gmm_split_mode, plan=plan)
+                          gmm_split_mode=dc.gmm_split_mode, plan=plan,
+                          bucket=dc.bucket_spec().key())
 
 
-def _bridge_of(dc: DroplessConfig, top_i, mc):
+def _bridge_of(dc: DroplessConfig, top_i, mc, cache: Optional[SSCCache] = None):
     from repro.models.moe import plan_from_routing
-    return plan_from_routing(top_i, mc, dc.ep, capacity=None,
-                             bucket_rows=dc.bucket_rows)
+    bridge = plan_from_routing(top_i, mc, dc.ep, capacity=None,
+                               bucket=dc.bucket_spec())
+    if cache is not None:
+        # Dropless keeps every choice, so the exact row count is the full
+        # [ep, T_loc, k] choice grid; the bucketed plan's total is what the
+        # executor actually allocates/streams.
+        cache.record_rows(int(bridge.send_row.size),
+                          bridge.plan.total_rows)
+    return bridge
 
 
 def _exec_forward(dc: DroplessConfig, cache: SSCCache, mc,
@@ -184,7 +217,7 @@ def _exec_forward(dc: DroplessConfig, cache: SSCCache, mc,
     T, d = xt.shape
     f = mc.d_expert
 
-    bridge = _bridge_of(dc, top_i, mc)
+    bridge = _bridge_of(dc, top_i, mc, cache)
     plan = bridge.plan
     cfg = _schedule_cfg(dc, plan, d, f)
     sched = cache.get_or_compile(cfg, "forward",

@@ -118,12 +118,23 @@ def main():
                          "priced candidate) instead of the pipeline table")
     ap.add_argument("--ep", type=int, default=8)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--report-out", default=None, metavar="PATH",
+                    help="with --selector-report: write predicted-vs-"
+                         "simulated rows as JSONL (selector-calibration "
+                         "dataset)")
     args = ap.parse_args()
-    if args.sched_sweep or args.selector_report:
-        if args.selector_report:
-            selector_report(ep=args.ep, out=args.out)
-        else:
-            sched_sweep(ep=args.ep, out=args.out)
+    if args.sched_sweep or args.selector_report or args.report_out:
+        # One sweep CLI surface: delegate flags and cross-flag validation
+        # to the jax-free twin so the two entrypoints cannot diverge.
+        from repro.launch.schedsweep import main as sweep_main
+        argv = ["--ep", str(args.ep)]
+        argv += ["--selector-report"] if args.selector_report else \
+            (["--sched-sweep"] if args.sched_sweep else [])
+        if args.out:
+            argv += ["--out", args.out]
+        if args.report_out:
+            argv += ["--report-out", args.report_out]
+        sweep_main(argv)
         return
     if args.cell is None:
         ap.error("--cell is required unless --sched-sweep is given")

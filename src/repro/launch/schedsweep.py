@@ -128,6 +128,7 @@ def sched_sweep(ep: int = 8, out: str | None = None, *, e_loc: int = 8,
 def selector_report(ep: int = 8, out: str | None = None, *, e_loc: int = 8,
                     rows: int = 128, d_model: int = 2048, d_ff: int = 512,
                     gmm_m_split: int | None = None,
+                    report_out: str | None = None,
                     quiet: bool = False) -> list[dict]:
     """Predicted-vs-simulated makespan for every candidate the selector
     priced — the selector's accuracy table.
@@ -137,8 +138,16 @@ def selector_report(ep: int = 8, out: str | None = None, *, e_loc: int = 8,
     scenario *ordering*: ``picked`` flags the selector's argmin,
     ``sim_best`` the simulator's, and ``regret`` what the pick costs
     relative to the simulated optimum over the priced candidates.
+
+    ``report_out`` appends-nothing/overwrites a JSONL file — one
+    predicted-vs-simulated row per line, each stamped with the sweep's
+    sizing — the accumulating dataset the ROADMAP "selector calibration"
+    item fits the pass-effect constants from (``out`` remains the
+    one-shot JSON dump).
     """
     m_split = gmm_m_split if gmm_m_split is not None else 8 * ep
+    sizing = {"ep": ep, "e_loc": e_loc, "rows": rows, "d_model": d_model,
+              "d_ff": d_ff, "gmm_m_split": m_split}
     rows_out: list[dict] = []
     for plan_name, plan in sweep_scenarios(ep, e_loc, rows):
         cfg = _scenario_cfg(plan, ep, e_loc, rows, d_model, d_ff, m_split)
@@ -155,12 +164,15 @@ def selector_report(ep: int = 8, out: str | None = None, *, e_loc: int = 8,
                 rows_out.append({
                     "plan": plan_name, "direction": direction,
                     "candidate": cand.tag,
+                    "pipeline": cand.pipeline.spec(),
+                    "cand_m_split": cand.cfg.gmm_m_split,
                     "predicted_us": cand.predicted_us,
                     "simulated_us": sims[cand.tag],
                     "picked": picked,
                     "sim_best": cand.tag == sim_best,
                     "regret": (sims[choice.tag] / sims[sim_best] - 1.0
                                if picked else None),
+                    **sizing,
                 })
                 if not quiet:
                     mark = ("←pick" if picked else "") + \
@@ -175,4 +187,42 @@ def selector_report(ep: int = 8, out: str | None = None, *, e_loc: int = 8,
     if out:
         with open(out, "w") as f:
             json.dump(rows_out, f, indent=1)
+    if report_out:
+        with open(report_out, "w") as f:
+            for row in rows_out:
+                f.write(json.dumps(row) + "\n")
     return rows_out
+
+
+def main(argv=None):
+    """Jax-free CLI twin of ``repro.launch.hillclimb --sched-sweep``."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="schedule-pipeline sweep / selector accuracy report "
+                    "(no jax import, no forced XLA platform)")
+    ap.add_argument("--sched-sweep", action="store_true",
+                    help="run the SCHED_PIPELINES (+auto) sweep table")
+    ap.add_argument("--selector-report", action="store_true",
+                    help="dump predicted-vs-simulated makespan for every "
+                         "candidate the selector priced")
+    ap.add_argument("--ep", type=int, default=8)
+    ap.add_argument("--out", default=None,
+                    help="write the table as one JSON document")
+    ap.add_argument("--report-out", default=None, metavar="PATH",
+                    help="with --selector-report: write one predicted-vs-"
+                         "simulated row per line as JSONL (the selector-"
+                         "calibration dataset)")
+    args = ap.parse_args(argv)
+    if args.report_out and not args.selector_report:
+        ap.error("--report-out requires --selector-report")
+    if args.selector_report:
+        selector_report(ep=args.ep, out=args.out,
+                        report_out=args.report_out)
+    elif args.sched_sweep:
+        sched_sweep(ep=args.ep, out=args.out)
+    else:
+        ap.error("nothing to do: pass --sched-sweep or --selector-report")
+
+
+if __name__ == "__main__":
+    main()

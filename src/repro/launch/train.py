@@ -36,9 +36,14 @@ def main(argv=None):
     ap.add_argument("--dropless-ep", type=int, default=0,
                     help="EP group size of the compiled dropless fragment "
                          "(0 = the mesh's model-axis size)")
-    ap.add_argument("--dropless-bucket", type=int, default=16,
-                    help="shape-bucket size for plan row counts (1 = exact "
-                         "plans, recompile on every routing change)")
+    ap.add_argument("--dropless-bucket", default="16", metavar="SPEC",
+                    help="shape-bucket policy for plan row counts: a "
+                         "linear bucket size int ('16'; '1' = exact plans, "
+                         "recompile on every routing change), "
+                         "'geometric:B[xG]' (power-of-G rungs from base "
+                         "B), or 'ladder:E1,E2,...' (explicit rungs, e.g. "
+                         "fitted by repro.launch.replay); see "
+                         "repro.core.buckets.BucketSpec")
     ap.add_argument("--sched", default=None, metavar="PIPELINE",
                     help="schedule-pass pipeline for the dropless path: "
                          "'auto' (cost-model-guided selection per batch "
@@ -110,13 +115,19 @@ def main(argv=None):
                      f"family={cfg.family!r})")
     dropless = None
     if args.dropless and cfg.family == "moe":
+        from repro.core.buckets import BucketSpec
         from repro.launch.dropless import DroplessConfig
+        try:
+            bucket = BucketSpec.parse(args.dropless_bucket)
+        except ValueError as e:
+            ap.error(str(e))
         kw = {}
         if sched_pipeline is not None:
             kw["pipeline"] = sched_pipeline
         dropless = DroplessConfig(
             ep=args.dropless_ep or mesh.shape.get("model", 1),
-            bucket_rows=args.dropless_bucket, **kw)
+            bucket=bucket, **kw)
+        print(f"dropless shape buckets: {bucket}")
         if sched_pipeline is not None:
             print(f"dropless schedule pipeline: {dropless.pipeline!r}")
     fns = St.make_steps(cfg, mesh, opt=oc, ep=ep, mode=args.mode,

@@ -198,38 +198,48 @@ def _cumcount(keys: np.ndarray) -> np.ndarray:
     return rank
 
 
-def bucket_counts(counts: np.ndarray, bucket_rows: int) -> np.ndarray:
-    """Quantize per-(src, dst, expert) row counts to ``bucket_rows`` buckets.
+def bucket_counts(counts: np.ndarray, bucket_rows=1) -> np.ndarray:
+    """Quantize per-(src, dst, expert) row counts into shape buckets.
 
-    Nonzero cells round *up* to the next multiple of ``bucket_rows`` (the
-    padding rows stay zero-filled in the send buffers, so execution is
-    unchanged); empty cells stay empty so plan sparsity — and therefore the
-    task graph's nonzero-cell structure — is preserved. Two batches whose
-    counts land in the same buckets produce identical plans and therefore
-    share one SSC cache entry: this is the shape-bucketing layer that keeps
-    the dropless cache hit rate high under batch-to-batch routing jitter.
+    ``bucket_rows`` is any :func:`repro.core.buckets.BucketSpec.from_any`
+    argument: the legacy linear bucket-size int, a :class:`BucketSpec`
+    (``linear`` / ``geometric`` / fitted ``ladder``), or a parsed spec
+    string like ``"geometric:8"``. Nonzero cells round *up* to their policy
+    bucket (the padding rows stay zero-filled in the send buffers, so
+    execution is unchanged); empty cells stay empty so plan sparsity — and
+    therefore the task graph's nonzero-cell structure — is preserved. Two
+    batches whose counts land in the same buckets produce identical plans
+    and therefore share one SSC cache entry: this is the shape-bucketing
+    layer that keeps the dropless cache hit rate high under batch-to-batch
+    routing jitter.
     """
-    if bucket_rows <= 1:
+    from repro.core.buckets import BucketSpec
+    spec = BucketSpec.from_any(bucket_rows)
+    if spec.is_exact:
         return counts
-    q = -(-counts // bucket_rows) * bucket_rows
-    return np.where(counts > 0, q, 0)
+    return spec.quantize(counts)
 
 
 def plan_from_routing(top_i, mc: MoEConfig, ep: int,
                       capacity: Optional[int] = None,
-                      bucket_rows: int = 1) -> RoutingBridge:
+                      bucket_rows: int = 1, bucket=None) -> RoutingBridge:
     """Turn real router output into a compilable :class:`RoutingBridge`.
 
     ``top_i``: expert indices [T, k] (tokens split contiguously over ``ep``
     source ranks; T % ep == 0) or already per-rank [ep, T_loc, k].
     ``capacity``: per-(global expert) token cap applied in global token
     order, matching ``make_dispatch``; ``None`` = dropless.
-    ``bucket_rows``: quantize each cell's row count up to this bucket size
-    (see :func:`bucket_counts`); the actual rows occupy the head of each
-    padded cell and the tail rows stay zero, so a schedule compiled for the
-    bucketed plan computes the same result as the exact one.
+    ``bucket``: a :class:`repro.core.buckets.BucketSpec` (or anything
+    ``BucketSpec.from_any`` accepts) quantizing each cell's row count up to
+    its shape bucket; ``bucket_rows`` is the legacy linear-bucket int shim
+    (``bucket`` wins when both are given). The actual rows occupy the head
+    of each padded cell and the tail rows stay zero, so a schedule compiled
+    for the bucketed plan computes the same result as the exact one.
     """
+    from repro.core.buckets import normalize_bucket
     from repro.core.routing import RoutingPlan
+
+    spec = normalize_bucket(bucket, bucket_rows)
 
     ti = np.asarray(top_i)
     if ti.ndim == 2:
@@ -257,7 +267,7 @@ def plan_from_routing(top_i, mc: MoEConfig, ep: int,
 
     counts = np.zeros((ep, ep, e_loc), dtype=np.int64)
     np.add.at(counts, (src_idx[keep], d_idx[keep], e_idx[keep]), 1)
-    plan = RoutingPlan.from_counts(bucket_counts(counts, bucket_rows))
+    plan = RoutingPlan.from_counts(bucket_counts(counts, spec))
 
     # Row within the (src, dst, expert) send cell = occurrence index among
     # the *kept* choices of that cell, in local order.

@@ -146,7 +146,8 @@ def _combine(back, top_p, top_i, slot, T, d, ep, e_loc, C, dtype):
     return y.astype(dtype)
 
 
-def make_moe_ep(mesh, epc: EPConfig, act: str = "swiglu", plan=None):
+def make_moe_ep(mesh, epc: EPConfig, act: str = "swiglu", plan=None,
+                bucket=None):
     """Returns moe_impl(params, x, mc) running EP over the model axis.
 
     ``plan``: an optional host-known :class:`RoutingPlan` (e.g. from
@@ -156,13 +157,29 @@ def make_moe_ep(mesh, epc: EPConfig, act: str = "swiglu", plan=None):
     any source actually sends at that ring distance — and ring steps that
     would carry only padding for every rank are skipped outright (the
     ROADMAP "ragged EP path"). Chunk caps are static Python ints, so a new
-    plan triggers a retrace: pair this with plan bucketing for reuse, the
-    same trade the SSC cache makes. If the plan undercounts the real
-    routing, overflow rows degrade to capacity-style drops (their result
-    rows stay zero); they are never mis-gathered.
+    plan triggers a retrace. ``bucket`` (a
+    :class:`repro.core.buckets.BucketSpec` or anything
+    ``BucketSpec.from_any`` accepts) quantizes the plan's counts before the
+    caps are derived, so jittered per-batch plans collapse onto a small set
+    of cap tuples and the retrace count stays bounded by the policy's rung
+    ladder instead of growing with every batch — the same trade the SSC
+    cache makes, applied to jit traces. Buckets only ever round counts
+    *up*, so a bucketed plan never undercounts the routing it was derived
+    from. If the (possibly bucketed) plan undercounts the real routing —
+    e.g. a stale plan reused across batches — overflow rows degrade to
+    capacity-style drops (their result rows stay zero); they are never
+    mis-gathered.
     """
     ep = mesh.shape[epc.axis]
     dp = tuple(a for a in mesh.axis_names if a != epc.axis)
+    if bucket is not None:
+        if plan is None:
+            raise ValueError(
+                "make_moe_ep(bucket=...) quantizes a routing plan's ring "
+                "caps — pass plan= as well (without one the fixed-capacity "
+                "path runs and the bucket would be silently ignored)")
+        from repro.core.buckets import BucketSpec
+        plan = BucketSpec.from_any(bucket).apply(plan)
     ring_caps = ring_chunk_caps(plan, ep) if plan is not None else None
 
     def moe_impl(params, x, mc: MoEConfig):

@@ -1,0 +1,332 @@
+"""BucketSpec: plan-quantization policies and their contracts.
+
+The properties every policy must keep (``core/buckets.py`` docstring):
+coverage (bucketed plans have room for the exact rows), sparsity
+preservation, idempotence, monotonicity; coarser specs never lower the
+cache hit rate on a fixed trace; ``linear(rows)`` is SSC-key-identical to
+the legacy ``bucket_rows`` int; padding rows are inert (executor-verified
+against ``moe_grouped``); ``fit_ladder`` learns valid, padding-bounded
+ladders from plan populations; and the spec rides the SSC key /
+``Schedule.opts`` / the blob.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _proptest import given, settings, st
+
+from repro.core.buckets import (BucketSpec, coarsens, fit_ladder,
+                                normalize_bucket)
+from repro.core.odg import ScheduleConfig
+from repro.core.routing import random_plan
+from repro.core.ssc import SSCCache, ssc_to_schedule
+from repro.launch.dropless import DroplessConfig, DroplessMoE
+from repro.models.moe import (MoEConfig, bucket_counts, init_moe,
+                              moe_grouped, plan_from_routing)
+
+KEY = jax.random.PRNGKey(0)
+
+POLICIES = [
+    BucketSpec.exact(),
+    BucketSpec.linear(4),
+    BucketSpec.linear(16),
+    BucketSpec.geometric(4),
+    BucketSpec.geometric(8, growth=1.5),
+    BucketSpec.ladder([4, 9, 17]),
+]
+
+
+# ---------------------------------------------------------------------------
+# Quantization invariants, for every policy.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, len(POLICIES) - 1), st.integers(0, 2 ** 31 - 1))
+def test_quantize_invariants(pol_idx, seed):
+    spec = POLICIES[pol_idx]
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, 200, size=(3, 3, 2))
+    c[rng.random(c.shape) < 0.3] = 0
+    q = spec.quantize(c)
+    assert (q >= c).all(), "coverage: counts round up"
+    assert ((q == 0) == (c == 0)).all(), "sparsity preserved"
+    assert (spec.quantize(q) == q).all(), "idempotent"
+    flat = np.sort(c.reshape(-1))
+    qf = spec.quantize(flat)
+    assert (np.diff(qf) >= 0).all(), "monotone"
+
+
+def test_ladder_overflow_rounds_to_top_edge_multiples():
+    spec = BucketSpec.ladder([4, 16])
+    c = np.array([1, 4, 5, 16, 17, 31, 32, 33, 100])
+    np.testing.assert_array_equal(
+        spec.quantize(c), [4, 4, 16, 16, 32, 32, 32, 48, 112])
+
+
+def test_parse_key_roundtrip_and_errors():
+    for text in ("16", "exact", "linear:16", "geometric:8",
+                 "geometric:8x1.5", "ladder:4,8,32"):
+        spec = BucketSpec.parse(text)
+        assert BucketSpec.from_any(spec.key()) == spec
+        assert BucketSpec.from_any(spec.spec()) == spec
+        assert BucketSpec.parse(str(spec)) == spec
+    assert BucketSpec.from_any(None) == BucketSpec.exact()
+    assert BucketSpec.from_any(16) == BucketSpec.linear(16)
+    with pytest.raises(ValueError):
+        BucketSpec.parse("wavelet:3")
+    with pytest.raises(ValueError):
+        BucketSpec.geometric(4, growth=1.0)
+    with pytest.raises(ValueError):
+        BucketSpec.ladder([])
+    with pytest.raises(TypeError):
+        BucketSpec.from_any(3.5)
+    assert normalize_bucket(BucketSpec.linear(8), 99) == BucketSpec.linear(8)
+    assert normalize_bucket(None, 8) == BucketSpec.linear(8)
+
+
+# ---------------------------------------------------------------------------
+# The legacy bucket_rows int shim is key-identical to linear(rows).
+# ---------------------------------------------------------------------------
+
+def test_linear_spec_key_identical_to_legacy_int():
+    mc = MoEConfig(n_experts=8, top_k=2, d_expert=8)
+    rng = np.random.default_rng(0)
+    ti = rng.integers(0, 8, size=(64, 2))
+    legacy = plan_from_routing(ti, mc, 4, capacity=None, bucket_rows=16)
+    spec = plan_from_routing(ti, mc, 4, capacity=None,
+                             bucket=BucketSpec.linear(16))
+    assert legacy.plan.counts == spec.plan.counts
+
+    c = np.asarray(legacy.plan.counts)
+    np.testing.assert_array_equal(bucket_counts(c, 16),
+                                  bucket_counts(c, BucketSpec.linear(16)))
+
+    # DroplessConfig: deprecated int field and explicit spec → one SSC key.
+    dcs = [DroplessConfig(ep=4, bucket_rows=16),
+           DroplessConfig(ep=4, bucket=BucketSpec.linear(16)),
+           DroplessConfig(ep=4, bucket="linear:16"),
+           DroplessConfig(ep=4, bucket=16)]
+    assert len({dc.bucket_spec() for dc in dcs}) == 1
+    cfgs = [ScheduleConfig(ep=4, e_loc=2, rows=0, d_model=16, d_ff=8,
+                           plan=legacy.plan, bucket=dc.bucket_spec().key())
+            for dc in dcs]
+    keys = {SSCCache.key(cfg, "forward", pipeline=["ratr"])
+            for cfg in cfgs}
+    assert len(keys) == 1
+
+
+def test_schedule_config_normalizes_bucket_forms():
+    plan = random_plan(2, 2, 8, np.random.default_rng(0))
+    variants = [16, "linear:16", BucketSpec.linear(16), ("linear", 16),
+                ["linear", 16]]
+    cfgs = [ScheduleConfig(ep=2, e_loc=2, rows=0, d_model=16, d_ff=8,
+                           plan=plan, bucket=b) for b in variants]
+    assert all(cfg.bucket == ("linear", 16) for cfg in cfgs)
+    assert len({hash(cfg) for cfg in cfgs}) == 1
+    # distinct policies with identical counts must not alias
+    other = dataclasses.replace(cfgs[0], bucket=("geometric", 16, 2.0))
+    assert SSCCache.key(cfgs[0], "forward", pipeline=["ratr"]) \
+        != SSCCache.key(other, "forward", pipeline=["ratr"])
+
+
+# ---------------------------------------------------------------------------
+# Every policy's bucketed plan covers the exact plan cell-wise.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, len(POLICIES) - 1), st.integers(0, 2 ** 31 - 1))
+def test_bucketed_plan_covers_exact(pol_idx, seed):
+    spec = POLICIES[pol_idx]
+    mc = MoEConfig(n_experts=8, top_k=2, d_expert=8)
+    rng = np.random.default_rng(seed)
+    ti = rng.integers(0, 8, size=(32, 2))
+    exact = plan_from_routing(ti, mc, 4, capacity=None)
+    bucketed = plan_from_routing(ti, mc, 4, capacity=None, bucket=spec)
+    ce, cb = np.asarray(exact.plan.counts), np.asarray(bucketed.plan.counts)
+    assert (cb >= ce).all()
+    assert ((cb == 0) == (ce == 0)).all()
+    assert (bucketed.send_row >= 0).all()     # dropless: nothing dropped
+    # BucketSpec.apply agrees with the bridge path
+    assert spec.apply(exact.plan).counts == bucketed.plan.counts
+
+
+# ---------------------------------------------------------------------------
+# Padding rows are inert: executor results match the grouped reference
+# under geometric and ladder buckets, forward and backward.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bucket", [BucketSpec.geometric(4),
+                                    BucketSpec.ladder([3, 10, 24])])
+def test_dropless_impl_matches_grouped_under_policies(bucket):
+    mc = MoEConfig(n_experts=8, top_k=2, d_expert=8, capacity_factor=8.0)
+    d = 16
+    params = init_moe(KEY, d, mc)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d), jnp.float32)
+    dm = DroplessMoE(DroplessConfig(ep=4, bucket=bucket),
+                     cache=SSCCache(max_entries=8))
+    want = moe_grouped(params, x, mc, cap=10_000)
+    y = jax.jit(lambda p, x: dm.impl(p, x, mc))(params, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    g1 = jax.grad(lambda p: jnp.sum(dm.impl(p, x, mc) ** 2))(params)
+    g2 = jax.grad(lambda p: jnp.sum(
+        moe_grouped(p, x, mc, cap=10_000) ** 2))(params)
+    for k in g1:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   rtol=1e-3, atol=1e-4, err_msg=k)
+    # pad accounting flowed into the cache
+    info = dm.cache.info()
+    assert info["padded_rows"] >= info["exact_rows"] > 0
+    assert dm.step_stats()["pad_ratio"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Coarser specs never lower the cache hit rate on a fixed trace.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fine,coarse", [
+    (BucketSpec.linear(4), BucketSpec.linear(8)),
+    (BucketSpec.linear(8), BucketSpec.linear(32)),
+    (BucketSpec.linear(8), BucketSpec.geometric(8)),
+    (BucketSpec.exact(), BucketSpec.geometric(4)),
+])
+def test_coarser_spec_never_lowers_hit_rate(fine, coarse):
+    mc = MoEConfig(n_experts=8, top_k=2, d_expert=8)
+    rng = np.random.default_rng(0)
+    trace = [rng.integers(0, 8, size=(64, 2)) for _ in range(16)]
+    all_counts = []
+    keys = {fine: set(), coarse: set()}
+    misses = {fine: 0, coarse: 0}
+    for ti in trace:
+        for spec in (fine, coarse):
+            plan = plan_from_routing(ti, mc, 4, capacity=None,
+                                     bucket=spec).plan
+            if plan.counts not in keys[spec]:
+                misses[spec] += 1
+                keys[spec].add(plan.counts)
+        all_counts.extend(np.asarray(
+            plan_from_routing(ti, mc, 4, capacity=None).plan.counts
+        ).reshape(-1).tolist())
+    # precondition: coarse's buckets are unions of fine's on this trace —
+    # which is exactly what makes the hit-rate claim a theorem, not luck
+    assert coarsens(coarse, fine, all_counts)
+    assert misses[coarse] <= misses[fine]
+
+
+# ---------------------------------------------------------------------------
+# fit_ladder: valid ladders, padding bounds, flip-risk pricing.
+# ---------------------------------------------------------------------------
+
+def _population(seed=0, n=12):
+    rng = np.random.default_rng(seed)
+    mc = MoEConfig(n_experts=8, top_k=2, d_expert=8)
+    return [plan_from_routing(rng.integers(0, 8, size=(64, 2)), mc, 4,
+                              capacity=None).plan for _ in range(n)]
+
+
+def test_fit_ladder_shape_and_padding():
+    plans = _population()
+    counts = np.stack([np.asarray(p.counts) for p in plans])
+    top = int(counts.max())
+    for budget in (1, 2, 4):
+        spec = fit_ladder(plans, budget, split_penalty=0.0)
+        assert spec.policy == "ladder"
+        assert 1 <= len(spec.edges) <= budget
+        assert spec.edges[-1] == top            # max always covered
+        assert all(e in np.unique(counts[counts > 0]) for e in spec.edges)
+    # exhaustive budget + no flip pricing → zero padding on the population
+    n_distinct = len(np.unique(counts[counts > 0]))
+    exact_fit = fit_ladder(plans, n_distinct, split_penalty=0.0)
+    assert exact_fit.pad_ratio(counts) == 1.0
+    # a padding-optimal fit never pads more than the budget-1 single rung
+    one = fit_ladder(plans, 1, split_penalty=0.0)
+    four = fit_ladder(plans, 4, split_penalty=0.0)
+    assert four.pad_ratio(counts) <= one.pad_ratio(counts)
+    with pytest.raises(ValueError):
+        fit_ladder(plans, 0)
+    with pytest.raises(ValueError):
+        fit_ladder(plans, 4, split_penalty=-1.0)
+    with pytest.raises(ValueError):
+        fit_ladder([np.zeros((2, 2, 2), np.int64)], 2)
+
+
+def test_fit_ladder_split_penalty_buys_stability():
+    """Raising split_penalty must not increase the number of distinct keys
+    the fitted ladder produces on its own population (boundaries leave
+    high-traffic cell ranges first)."""
+    plans = _population()
+
+    def distinct_keys(spec):
+        return len({spec.apply(p).counts for p in plans})
+
+    k_sharp = distinct_keys(fit_ladder(plans, 4, split_penalty=0.0))
+    k_stable = distinct_keys(fit_ladder(plans, 4, split_penalty=4.0))
+    assert k_stable <= k_sharp
+
+
+# ---------------------------------------------------------------------------
+# The spec rides Schedule.opts and the serialized blob.
+# ---------------------------------------------------------------------------
+
+def test_blob_records_bucket_provenance():
+    spec = BucketSpec.geometric(4)
+    mc = MoEConfig(n_experts=4, top_k=1, d_expert=8)
+    ti = np.repeat(np.arange(4), 8)[:, None]
+    plan = plan_from_routing(ti, mc, 2, capacity=None, bucket=spec).plan
+    cfg = ScheduleConfig(ep=2, e_loc=2, rows=0, d_model=16, d_ff=8,
+                         plan=plan, bucket=spec.key())
+    cache = SSCCache(max_entries=4)
+    sched = cache.get_or_compile(cfg, "forward", pipeline=["ratr"])
+    assert sched.opts["bucket"] == ["geometric", 4, 2.0]
+    blob_key = cache.key(cfg, "forward", pipeline=["ratr"])
+    rt = ssc_to_schedule(cache._cache[blob_key])
+    assert rt.opts["bucket"] == ["geometric", 4, 2.0]
+    assert BucketSpec.from_any(rt.opts["bucket"]) == spec
+    # unbucketed compiles don't grow an opts key
+    cfg0 = dataclasses.replace(cfg, bucket=None)
+    sched0 = cache.get_or_compile(cfg0, "forward", pipeline=["ratr"])
+    assert "bucket" not in sched0.opts
+
+
+def test_ssc_record_rows_counters():
+    cache = SSCCache(max_entries=4)
+    assert cache.info()["pad_ratio"] == 1.0
+    cache.record_rows(100, 150)
+    assert cache.info()["pad_ratio"] == pytest.approx(1.5)
+    st1 = cache.step_stats()
+    assert st1["pad_ratio"] == pytest.approx(1.5)
+    st2 = cache.step_stats()           # no rows recorded since → neutral
+    assert st2["pad_ratio"] == 1.0
+    with pytest.raises(ValueError):
+        cache.record_rows(10, 9)
+
+
+# ---------------------------------------------------------------------------
+# Ragged EP: bucketed ring caps cover the exact plan's caps.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, len(POLICIES) - 1), st.integers(0, 2 ** 31 - 1))
+def test_bucketed_ring_caps_cover_exact(pol_idx, seed):
+    from repro.parallel.ep import ring_chunk_caps
+    spec = POLICIES[pol_idx]
+    plan = random_plan(4, 2, 40, np.random.default_rng(seed))
+    capped = spec.apply(plan)
+    exact_caps = ring_chunk_caps(plan, 4)
+    buck_caps = ring_chunk_caps(capped, 4)
+    assert all(b >= e for b, e in zip(buck_caps, exact_caps))
+    # all-padding steps stay skipped (zero caps preserved)
+    assert all((b == 0) == (e == 0) for b, e in zip(buck_caps, exact_caps))
+
+
+def test_make_moe_ep_bucket_requires_plan():
+    from repro.launch.mesh import make_test_mesh
+    from repro.parallel.ep import EPConfig, make_moe_ep
+    mesh = make_test_mesh(data=1, model=1)
+    with pytest.raises(ValueError, match="plan"):
+        make_moe_ep(mesh, EPConfig(), bucket="geometric:8")

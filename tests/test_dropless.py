@@ -89,7 +89,8 @@ def test_cache_hits_repeated_and_bucketed_jitter():
     stats = bucketed.step_stats()
     assert stats["hits"] == 2 and stats["misses"] == 1
     assert bucketed.step_stats() == {"hits": 0, "misses": 0,
-                                     "evictions": 0, "entries": 1}
+                                     "evictions": 0, "entries": 1,
+                                     "pad_ratio": 1.0}
 
 
 # ---------------------------------------------------------------------------
@@ -246,9 +247,13 @@ plan = plan_from_dispatch(top_i, mc, ep, C)
 
 full = make_moe_ep(mesh, EPConfig(capacity_factor=16.0))
 ragged = make_moe_ep(mesh, EPConfig(capacity_factor=16.0), plan=plan)
+# bucketed plan: caps only ever round up, so results must be identical
+ragged_b = make_moe_ep(mesh, EPConfig(capacity_factor=16.0), plan=plan,
+                       bucket="geometric:8")
 with jax.set_mesh(mesh):
     y_full = jax.jit(lambda p, x: full(p, x, mc))(params, x)
     y_ragged = jax.jit(lambda p, x: ragged(p, x, mc))(params, x)
+    y_ragged_b = jax.jit(lambda p, x: ragged_b(p, x, mc))(params, x)
     g = jax.jit(jax.grad(lambda p, x: jnp.sum(ragged(p, x, mc) ** 2)))(
         params, x)
     g_ref = jax.grad(lambda p, x: jnp.sum(
@@ -257,6 +262,9 @@ np.testing.assert_allclose(np.asarray(y_full), np.asarray(ref),
                            rtol=1e-4, atol=1e-4)
 np.testing.assert_allclose(np.asarray(y_ragged), np.asarray(y_full),
                            rtol=1e-6, atol=1e-6)
+np.testing.assert_allclose(np.asarray(y_ragged_b), np.asarray(y_full),
+                           rtol=1e-6, atol=1e-6)
+print("RAGGED_BUCKET_OK")
 for k in g:
     np.testing.assert_allclose(np.asarray(g[k]), np.asarray(g_ref[k]),
                                rtol=1e-3, atol=1e-3)
@@ -305,4 +313,5 @@ def test_ragged_ep_subprocess():
         cwd=os.path.join(os.path.dirname(__file__), ".."),
         env=env, capture_output=True, text=True, timeout=600)
     assert "RAGGED_EP_OK" in out.stdout, out.stderr[-2000:]
+    assert "RAGGED_BUCKET_OK" in out.stdout, out.stderr[-2000:]
     assert "RAGGED_SKIP_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,132 @@
+"""Decode-trace replay harness: trace synthesis, the recorded-trace JSONL
+format, per-policy replay metrics, and the bounded-retrace acceptance
+(exact plans retrace nearly every batch; laddered plans stay within their
+rung budget on stationary traffic)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.buckets import BucketSpec, fit_ladder
+from repro.launch.replay import (PROFILES, exact_plans, load_trace_jsonl,
+                                 main as replay_main, replay_trace,
+                                 resolve_policies, save_trace_jsonl,
+                                 synth_trace)
+from repro.models.moe import MoEConfig
+
+EP, E_LOC, T_LOC, K = 4, 2, 24, 2
+MC = MoEConfig(n_experts=EP * E_LOC, top_k=K, d_expert=16)
+
+
+def _trace(profile="uniform", steps=12, seed=0, **kw):
+    return synth_trace(profile, steps, ep=EP, e_loc=E_LOC, t_loc=T_LOC,
+                       top_k=K, seed=seed, **kw)
+
+
+def test_synth_trace_shapes_and_determinism():
+    for profile in PROFILES:
+        tr = _trace(profile)
+        assert len(tr) == 12
+        for ti in tr:
+            assert ti.ndim == 2 and ti.shape[1] == K
+            assert ti.shape[0] % EP == 0 and ti.shape[0] >= EP
+            assert ti.min() >= 0 and ti.max() < EP * E_LOC
+        tr2 = _trace(profile)
+        assert all(np.array_equal(a, b) for a, b in zip(tr, tr2))
+    # bursty actually varies the batch size; stationary profiles don't
+    sizes = {ti.shape[0] for ti in _trace("bursty", steps=24)}
+    assert len(sizes) > 1
+    assert len({ti.shape[0] for ti in _trace("uniform")}) == 1
+    # successive batches are correlated: churn only moves a fraction
+    tr = _trace("uniform", churn=0.1)
+    frac_changed = np.mean(tr[0] != tr[1])
+    assert frac_changed < 0.5
+    with pytest.raises(ValueError):
+        _trace("lumpy")
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    tr = _trace("bursty")
+    save_trace_jsonl(path, tr)
+    back = load_trace_jsonl(path)
+    assert len(back) == len(tr)
+    assert all(np.array_equal(a, b) for a, b in zip(tr, back))
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    with pytest.raises(ValueError):
+        load_trace_jsonl(str(empty))
+
+
+def test_resolve_policies_fitted_and_named():
+    fit = _trace("zipf", seed=1)
+    pol = resolve_policies(["exact", "linear:16", "fitted:3", "fitted:3x0"],
+                           fit, MC, EP)
+    assert pol["exact"].is_exact
+    assert pol["linear:16"] == BucketSpec.linear(16)
+    assert pol["fitted:3"].policy == "ladder"
+    assert 1 <= len(pol["fitted:3"].edges) <= 3
+    # explicit split_penalty=0 reproduces the pure padding-minimal fit
+    assert pol["fitted:3x0"] == fit_ladder(exact_plans(fit, MC, EP), 3,
+                                           split_penalty=0.0)
+    with pytest.raises(ValueError):
+        resolve_policies(["", " "], fit, MC, EP)
+
+
+def test_replay_rows_and_bounded_retraces():
+    steps = 12
+    trace = _trace("uniform", steps=steps)
+    fitted = fit_ladder(exact_plans(_trace("uniform", steps=steps, seed=1),
+                                    MC, EP), 4, split_penalty=1.0)
+    rows = {r["policy"]: r for r in replay_trace(
+        trace, MC, EP,
+        {"exact": BucketSpec.exact(), "fitted": fitted},
+        d_model=32, d_ff=16, simulate=True)}
+    for r in rows.values():
+        for key in ("hit_rate", "recompile_rate", "pad_ratio",
+                    "ep_retraces", "p50_us", "p99_us", "fetch_us_mean"):
+            assert key in r, key
+        assert r["steps"] == steps
+    exact, fit_row = rows["exact"], rows["fitted"]
+    # exact plans: nearly every churned batch is a fresh jit trace (ring
+    # caps are per-distance maxima, so tiny batches can repeat a cap tuple
+    # even when the full plan differs — hence "nearly")
+    assert exact["ep_retraces"] >= 0.75 * steps
+    assert exact["recompile_rate"] == 1.0
+    assert exact["pad_ratio"] == pytest.approx(1.0)
+    # bucketed: bounded by the ladder (+1 tolerance for the cold start)
+    assert fit_row["ep_retraces"] <= len(fitted.edges) + 1
+    assert fit_row["hit_rate"] >= exact["hit_rate"]
+    assert fit_row["pad_ratio"] > 1.0
+    # simulated latency is inflated by padding, not deflated
+    assert fit_row["p50_us"] >= exact["p50_us"]
+
+
+def test_replay_without_simulator_skips_latency():
+    rows = replay_trace(_trace(steps=4), MC, EP,
+                        {"linear:8": BucketSpec.linear(8)},
+                        d_model=32, d_ff=16, simulate=False)
+    assert "p50_us" not in rows[0]
+
+
+def test_replay_cli_end_to_end(tmp_path):
+    trace_path = str(tmp_path / "t.jsonl")
+    report_path = str(tmp_path / "r.jsonl")
+    rows = replay_main([
+        "--profile", "zipf", "--steps", "6", "--ep", "2", "--experts", "4",
+        "--t-loc", "16", "--d-model", "32", "--d-ff", "16",
+        "--policies", "exact,linear:8,fitted:3", "--no-sim",
+        "--trace-out", trace_path, "--report-out", report_path])
+    assert {r["policy"] for r in rows} == {"exact", "linear:8", "fitted:3"}
+    with open(report_path) as f:
+        parsed = [json.loads(line) for line in f if line.strip()]
+    assert len(parsed) == 3
+    # recorded trace replays identically through --trace-in
+    rows2 = replay_main([
+        "--trace-in", trace_path, "--ep", "2", "--experts", "4",
+        "--d-model", "32", "--d-ff", "16",
+        "--policies", "linear:8", "--no-sim"])
+    lin = next(r for r in rows if r["policy"] == "linear:8")
+    assert rows2[0]["hit_rate"] == lin["hit_rate"]
+    assert rows2[0]["pad_ratio"] == pytest.approx(lin["pad_ratio"])
