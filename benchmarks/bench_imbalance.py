@@ -23,7 +23,7 @@ from repro.core.routing import hotspot_plan, skewed_plan
 from repro.core.scheduler import compile_schedule
 from repro.core.simulator import simulate_baseline, simulate_unified
 
-from .common import emit
+from .common import emit, phase_summary
 
 EP, E_LOC, ROWS = 8, 8, 128
 D_MODEL, D_FF = 2048, 512
@@ -60,6 +60,8 @@ def run(hw: AscendA3 = AscendA3()) -> None:
              f"mac={uni.mac_ratio:.3f} "
              f"exposed={uni.exposed_comm_us:.1f}us "
              f"plan_skew={plan.expert_imbalance():.2f}x")
+        emit(f"imbalance_{name}_d2c", uni.dispatch_to_combine_us,
+             phase_summary(uni))
         emit(f"imbalance_{name}_crit_first", crit.makespan_us,
              f"reduction={(uni.makespan_us - crit.makespan_us) / max(1e-9, uni.makespan_us) * 100:+.2f}% "
              f"vs_ratr={uni.makespan_us:.1f}us")

@@ -13,7 +13,7 @@ from repro.core.odg import build_moe_ffn_backward, build_moe_ffn_forward
 from repro.core.scheduler import compile_schedule
 from repro.core.simulator import simulate_baseline, simulate_unified
 
-from .common import emit, opt_pipeline, paper_module_config
+from .common import emit, opt_pipeline, paper_module_config, phase_summary
 
 PAPER = {  # (baseline_ms, ours_ms) from Table 3
     (4, "fwd"): (16.3, 10.2), (4, "bwd"): (27.9, 19.4),
@@ -45,6 +45,8 @@ def run(hw: AscendA3 = AscendA3()) -> dict:
                  f"paper={pu}ms mac={u.mac_ratio:.2f} "
                  f"speedup={b.makespan_us / u.makespan_us:.2f}x "
                  f"paper_speedup={pb / pu:.2f}x")
+            emit(f"moe_ffn_ep{ep}_{tag}_d2c", u.dispatch_to_combine_us,
+                 phase_summary(u))
             out[(ep, tag)] = (b, u)
         emit(f"moe_ffn_ep{ep}_total_speedup",
              0.0, f"{tot_b / tot_u:.2f}x (paper "

@@ -16,6 +16,21 @@ def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.2f},{derived}")
 
 
+def phase_summary(sim) -> str:
+    """Space-separated per-phase busy-time breakdown of a ``SimResult``.
+
+    Pairs with the ``dispatch_to_combine_us`` span to show *where* the
+    busy time between the first dispatch and the last combine goes
+    (comma-free, so it fits a single CSV ``derived`` cell).
+    """
+    order = ("dispatch", "gmm", "vector", "combine", "boundary")
+    parts = [f"{ph}={sim.phase_us[ph]:.1f}us"
+             for ph in order if ph in sim.phase_us]
+    parts += [f"{ph}={us:.1f}us" for ph, us in sorted(sim.phase_us.items())
+              if ph not in order]
+    return " ".join(parts)
+
+
 def paper_module_config(ep: int, *, m_split_mult: int = 4) -> ScheduleConfig:
     """The §5.2 DeepSeek-style MoE-FFN module, per-device effective shapes.
 

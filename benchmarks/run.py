@@ -30,6 +30,8 @@ SECTIONS = [
      "benchmarks.bench_dropless"),
     ("replay", "Decode-trace replay: bucket policies under serving traffic",
      "benchmarks.bench_replay"),
+    ("fusion", "Cross-layer fusion: fused vs back-to-back fragment makespan",
+     "benchmarks.bench_fusion"),
     ("ep_modes", "EP mode comparison on the JAX system",
      "benchmarks.bench_ep_modes"),
     ("roofline", "TPU roofline table from the dry-run",

@@ -87,3 +87,36 @@ class CostModel:
         mean = sum(loads.values()) / len(loads)
         crit = max(loads, key=loads.get)
         return (loads[crit] / mean if mean > 0 else 1.0), crit
+
+    # -- multi-fragment aggregates (fused schedules, core/fusion.py) ---------
+
+    def fragment_rank_cube_us(self, sched) -> dict[int, dict[int, float]]:
+        """Per-fragment cube load: {fragment index: {rank: us}}.
+
+        Fragments are identified by ``meta["fragment"]`` (0 for every task
+        of an unfused schedule, so this degenerates to one entry equal to
+        :meth:`rank_cube_us`).
+        """
+        loads: dict[int, dict[int, float]] = defaultdict(
+            lambda: defaultdict(float))
+        frags: set[int] = set()
+        for td in sched.tasks:
+            f = td.meta.get("fragment", 0)
+            frags.add(f)
+            if td.queue_type == CTQ:
+                loads[f][td.rank] += self.task_us(td)
+        return {f: {r: loads[f].get(r, 0.0) for r in range(sched.ep)}
+                for f in sorted(frags)}
+
+    def fragment_critical_ranks(self, sched) -> dict[int, tuple[float, int]]:
+        """Per-fragment (straggler ratio, critical rank) — each fused
+        fragment carries its own plan, so its straggler is its own."""
+        out: dict[int, tuple[float, int]] = {}
+        for f, loads in self.fragment_rank_cube_us(sched).items():
+            if not loads:
+                out[f] = (1.0, -1)
+                continue
+            mean = sum(loads.values()) / len(loads)
+            crit = max(loads, key=loads.get)
+            out[f] = ((loads[crit] / mean if mean > 0 else 1.0), crit)
+        return out

@@ -59,13 +59,26 @@ def swiglu_grad_np(dg: np.ndarray, h: np.ndarray) -> np.ndarray:
 class ExecutorState:
     """All (tensor, rank) buffers of one EP group, host-side."""
 
-    def __init__(self, cfg: ScheduleConfig):
+    def __init__(self, cfg: ScheduleConfig,
+                 fragment_cfgs: Optional[list[ScheduleConfig]] = None):
         self.cfg = cfg
         self.buffers: dict[tuple[str, int], np.ndarray] = {}
         self.weights: dict[tuple[str, int], np.ndarray] = {}
         # (tensor, rank) -> total rows, precomputed from the schedule's write
         # set so lazily-created buffers get their full extent up front.
         self.rows_map: dict[tuple[str, int], int] = {}
+        # Multi-fragment schedules: per-fragment configs in execution order
+        # (each fragment's tasks must resolve routing against *its* plan).
+        self.fragment_cfgs = fragment_cfgs
+        # (junction index, rank) -> fn(full_input|None, lo, hi) -> [hi-lo, w]
+        # numerical remap for LayerBoundary tasks; identity when absent.
+        self.boundary_fns: dict[tuple[int, int], Callable] = {}
+
+    def cfg_of(self, td: TaskDescriptor) -> ScheduleConfig:
+        """The config governing this task's routing extents."""
+        if self.fragment_cfgs is not None:
+            return self.fragment_cfgs[td.meta.get("fragment", 0)]
+        return self.cfg
 
     def set_buffer(self, name: str, rank: int, arr: np.ndarray) -> None:
         self.buffers[(name, rank)] = np.asarray(arr, dtype=np.float32)
@@ -113,10 +126,11 @@ def _h_gmm(td: TaskDescriptor, st: ExecutorState) -> None:
     if td.meta.get("fallback"):
         # Unsplit task: block-diagonal GMM over the plan's expert blocks
         # (ragged extents; empty experts contribute no rows).
-        plan = st.cfg.routing
+        cfg = st.cfg_of(td)
+        plan = cfg.routing
         r = td.rank
         outs = []
-        for e in range(st.cfg.e_loc):
+        for e in range(cfg.e_loc):
             rows_e = plan.expert_rows(r, e)
             if rows_e == 0:
                 continue
@@ -141,10 +155,12 @@ def _h_gmm_wgrad(td: TaskDescriptor, st: ExecutorState) -> None:
     grad = st.get(g_rng.tensor, g_rng.rank)[g_rng.lo:g_rng.hi]
     act = st.get(act_rng.tensor, act_rng.rank)[act_rng.lo:act_rng.hi]
     key = (td.outputs[0].tensor, td.outputs[0].rank)
+    e_loc = st.cfg_of(td).e_loc
     if td.meta.get("fallback"):
-        plan = st.cfg.routing
+        cfg = st.cfg_of(td)
+        plan = cfg.routing
         r = td.rank
-        for e in range(st.cfg.e_loc):
+        for e in range(cfg.e_loc):
             rows_e = plan.expert_rows(r, e)
             if rows_e == 0:
                 continue      # no routed rows → zero gradient contribution
@@ -152,7 +168,7 @@ def _h_gmm_wgrad(td: TaskDescriptor, st: ExecutorState) -> None:
             dW = act[lo:lo + rows_e].T @ grad[lo:lo + rows_e]
             if key not in st.buffers:
                 st.buffers[key] = np.zeros(
-                    (st.cfg.e_loc, dW.shape[0], dW.shape[1]),
+                    (cfg.e_loc, dW.shape[0], dW.shape[1]),
                     dtype=np.float32)
             st.buffers[key][e] += dW
         return
@@ -160,7 +176,7 @@ def _h_gmm_wgrad(td: TaskDescriptor, st: ExecutorState) -> None:
     o = td.outputs[0]
     if key not in st.buffers:
         st.buffers[key] = np.zeros(
-            (st.cfg.e_loc, dW.shape[0], dW.shape[1]), dtype=np.float32)
+            (e_loc, dW.shape[0], dW.shape[1]), dtype=np.float32)
     st.buffers[key][o.lo] += dW      # m-chunks of one expert accumulate
 
 
@@ -183,12 +199,49 @@ def _h_swiglu_grad(td: TaskDescriptor, st: ExecutorState) -> None:
     buf[o.lo:o.hi] = out
 
 
+def _h_layer_boundary(td: TaskDescriptor, st: ExecutorState) -> None:
+    """Inter-layer token remap tile of a fused multi-fragment schedule.
+
+    The numerical remap (upstream combine-weighted sum composed with the
+    downstream layer's routing) lives outside the schedulable fragment;
+    ``st.boundary_fns[(junction, rank)]`` supplies it with the contract
+    ``fn(full_input_or_None, lo, hi) -> [hi - lo, width]`` where the row
+    range addresses the downstream send buffer. Without a registered fn the
+    tile is an identity row copy (legal only when the upstream return
+    buffer covers the downstream send rows — e.g. both layers share a
+    plan), which is what the pure-schedule tests exercise.
+    """
+    if td.inputs:
+        i = td.inputs[0]
+        data = st.get(i.tensor, i.rank)[i.lo:i.hi]
+    else:
+        data = None              # rank returned no rows upstream
+    o = td.outputs[0]
+    fn = st.boundary_fns.get((td.meta.get("boundary", 0), td.rank))
+    if fn is None:
+        if data is None or data.shape[0] < o.hi:
+            raise ScheduleError(
+                f"{td.op_name}: identity boundary needs {o.hi} upstream "
+                f"rows, have {0 if data is None else data.shape[0]}; "
+                f"register a boundary_fn for mismatched plans")
+        out = data[o.lo:o.hi]
+    else:
+        out = np.asarray(fn(data, o.lo, o.hi), dtype=np.float32)
+    if out.shape[0] != o.hi - o.lo:
+        raise ScheduleError(
+            f"{td.op_name}: boundary fn returned {out.shape[0]} rows "
+            f"for range [{o.lo}, {o.hi})")
+    buf = st.ensure(o.tensor, o.rank, o.hi, out.shape[1])
+    buf[o.lo:o.hi] = out
+
+
 HANDLERS: dict[str, Callable[[TaskDescriptor, ExecutorState], None]] = {
     "put_mem_signal": _h_put_mem_signal,
     "GMM": _h_gmm,
     "GMMWGrad": _h_gmm_wgrad,
     "SwiGLU": _h_swiglu,
     "SwiGLUGrad": _h_swiglu_grad,
+    "LayerBoundary": _h_layer_boundary,
 }
 
 

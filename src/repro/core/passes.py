@@ -247,3 +247,13 @@ def _pass_critical_rank_first(sched, cfg: ScheduleConfig, *,
                               lag: int = 0) -> None:
     from .reorder import apply_critical_rank_first
     apply_critical_rank_first(sched, cfg, threshold=threshold, lag=lag)
+
+
+@register_pass("fuse_boundary")
+def _pass_fuse_boundary(sched, cfg: ScheduleConfig) -> None:
+    """Fragment-spanning pass for fused schedules (core/fusion.py): hoist
+    each fragment's combine tiles toward the destination ranks with the
+    most next-fragment dispatch traffic. No-op on single-fragment
+    schedules."""
+    from .reorder import apply_fuse_boundary
+    apply_fuse_boundary(sched, cfg)

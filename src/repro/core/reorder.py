@@ -84,13 +84,27 @@ def ratr_order(rank: int, ep: int) -> list[int]:
 
 
 def apply_ratr(sched, cfg: ScheduleConfig) -> None:
+    """Ring-rotate each rank's comm blocks; fragment-aware.
+
+    On multi-fragment schedules the ring start additionally rotates by the
+    task's fragment index, so consecutive layers at the same source rank
+    begin their walks at *different* destinations — without this, a fused
+    schedule re-creates the transient hotspot RATR removes, once per layer
+    boundary. Single-fragment schedules (fragment 0 everywhere) reorder
+    byte-identically to the original RATR.
+    """
+    ep = cfg.ep
     for (rank, qtype), q in sched.queues.items():
         if qtype != VTQ:
             continue
-        ring_pos = {d: i for i, d in enumerate(ratr_order(rank, cfg.ep))}
-        sched.queues[(rank, qtype)] = reorder_comm_blocks(
-            sched, q, lambda tid: (ring_pos[sched.tasks[tid].dst_rank],
-                                   sched.tasks[tid].meta.get("expert", 0)))
+
+        def key(tid, rank=rank):
+            td = sched.tasks[tid]
+            frag = td.meta.get("fragment", 0)
+            return ((td.dst_rank - rank - 1 - frag) % ep,
+                    td.meta.get("expert", 0))
+
+        sched.queues[(rank, qtype)] = reorder_comm_blocks(sched, q, key)
 
 
 def apply_gmm_interleave(sched, cfg: ScheduleConfig) -> None:
@@ -217,6 +231,29 @@ def apply_critical_rank_first(sched, cfg: ScheduleConfig, *,
     if threshold is None:
         threshold = CRIT_STRAGGLER_THRESHOLD
     cost = CostModel(l2=False)
+    if len({td.meta.get("fragment", 0) for td in sched.tasks}) > 1:
+        # Fragment scope: each fused fragment carries its own routing plan,
+        # so the straggler is per-fragment — hoist each fragment's combine/
+        # dispatch blocks toward *that fragment's* critical rank. The
+        # starved-chain interleave is skipped here: a fused CTQ mixes
+        # fragments, so the 1:1-aligned single-chain precondition it relies
+        # on never holds across the mix.
+        crit_by_frag = {f: c for f, (ratio, c)
+                        in cost.fragment_critical_ranks(sched).items()
+                        if c >= 0 and ratio > threshold}
+        if not crit_by_frag:
+            return
+
+        def fkey(tid):
+            td = sched.tasks[tid]
+            c = crit_by_frag.get(td.meta.get("fragment", 0))
+            return 0 if (c is not None and td.dst_rank == c) else 1
+
+        for (rank, qtype), q in sched.queues.items():
+            if qtype != VTQ:
+                continue
+            sched.queues[(rank, qtype)] = reorder_comm_blocks(sched, q, fkey)
+        return
     ratio, crit = cost.critical_rank(sched)
     if crit < 0 or ratio <= threshold:
         return
@@ -242,6 +279,42 @@ def apply_critical_rank_first(sched, cfg: ScheduleConfig, *,
         return
     _interleave_aligned_queue(sched, (crit, CTQ),
                               lag=lag or 2 * cost.hw.num_aic)
+
+
+def apply_fuse_boundary(sched, cfg: ScheduleConfig) -> None:
+    """Interleave fragment-boundary comm into the neighbor's AIC shadow.
+
+    In a fused schedule, fragment f's combine tiles are the producers that
+    gate fragment f+1's dispatch (through the per-rank LayerBoundary
+    remap): the sooner all combines *into* rank r complete, the sooner r's
+    boundary fires and its next-layer dispatch issues — overlapping the
+    other ranks' still-running GMM and combine tails. Within each combine
+    block, stably hoist tiles returning to the ranks with the most
+    downstream dispatch traffic (they sit deepest on the next fragment's
+    critical path). Dispatch blocks and the last fragment's combines see a
+    constant key, so the stable sort leaves them — and any single-fragment
+    schedule — untouched.
+    """
+    dn_dispatch = defaultdict(float)     # (fragment, src rank) -> bytes
+    for td in sched.tasks:
+        if (td.task_type == "put_mem_signal"
+                and td.meta.get("comm_kind") == "dispatch"):
+            dn_dispatch[(td.meta.get("fragment", 0), td.rank)] += \
+                td.comm_bytes
+    if not dn_dispatch:
+        return
+
+    def key(tid):
+        td = sched.tasks[tid]
+        if td.meta.get("comm_kind") != "combine":
+            return (0.0,)
+        frag = td.meta.get("fragment", 0)
+        return (-dn_dispatch.get((frag + 1, td.dst_rank), 0.0),)
+
+    for (rank, qtype), q in sched.queues.items():
+        if qtype != VTQ:
+            continue
+        sched.queues[(rank, qtype)] = reorder_comm_blocks(sched, q, key)
 
 
 def apply_reorderings(sched, cfg: ScheduleConfig, *, ratr: bool,

@@ -46,10 +46,29 @@ class SimResult:
     # a load-imbalanced MoE batch creates even with perfect overlap.
     straggler_ratio: float = 1.0     # max / mean per-rank cube busy time
     critical_rank: int = -1          # rank with the largest cube busy time
+    # Paper headline metrics: busy time per phase kind (dispatch / gmm /
+    # vector / combine, plus boundary for fused schedules) and the explicit
+    # dispatch-to-combine span — first dispatch byte in flight to last
+    # combine byte landed.
+    phase_us: dict = dataclasses.field(default_factory=dict)
+    dispatch_to_combine_us: float = 0.0
+    # Multi-fragment schedules: execution-position index -> wall-clock span
+    # of that fragment's tasks. Overlap shows up as spans summing to more
+    # than the makespan.
+    fragment_makespan_us: dict = dataclasses.field(default_factory=dict)
 
     @property
     def l2_hit_rate(self) -> float:
         return self.l2_hits / max(1, self.l2_lookups)
+
+
+def _phase_of(td: TaskDescriptor) -> str:
+    """Phase kind for the per-phase breakdown (comm kinds from TD meta)."""
+    if td.task_type == "put_mem_signal":
+        return td.meta.get("comm_kind", "dispatch")
+    if td.task_type == "LayerBoundary":
+        return "boundary"
+    return "gmm" if td.queue_type == CTQ else "vector"
 
 
 class _L2:
@@ -114,7 +133,8 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
                      dispatch_overhead_us: float | None = None,
                      serialize_dispatch: bool = False,
                      workers_per_pool: dict | None = None,
-                     cost: CostModel | None = None) -> SimResult:
+                     cost: CostModel | None = None,
+                     fragment_barrier: bool = False) -> SimResult:
     """Event-driven simulation of the single-launch unified runtime.
 
     ``serialize_dispatch`` models an *online dynamic* scheduler: task
@@ -123,6 +143,11 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
     dispatch is per-worker queue consumption and overlaps freely.
     ``cost`` overrides the per-task duration model (default: the shared
     ``CostModel`` on ``hw`` with L2 residency effects on).
+    ``fragment_barrier`` serializes multi-fragment taskflows: fragment
+    ``j`` may not start until every task of fragments ``< j`` has
+    finished. This is the back-to-back per-layer reference a fused
+    schedule is measured against — identical tasks and costs, with the
+    cross-fragment overlap switched off.
     """
     cost = cost or CostModel(hw=hw)
     oh = (hw.static_dispatch_us if dispatch_overhead_us is None
@@ -152,6 +177,20 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
     now = 0.0
     comm_busy_intervals: list[tuple[float, float]] = []
     cube_busy_intervals: list[tuple[float, float]] = []
+    phase_busy: dict = defaultdict(float)
+    frag_span: dict = {}
+    d2c = [None, None]        # [first dispatch begin, last combine end]
+
+    def frag_of(td):
+        return td.meta.get("fragment", 0)
+
+    frag_total: dict[int, int] = defaultdict(int)
+    frag_done: dict[int, int] = defaultdict(int)
+    barrier_waiters: dict[int, list[int]] = defaultdict(list)
+    if fragment_barrier:
+        for td in s.tasks:
+            frag_total[frag_of(td)] += 1
+    open_frag = min(frag_total, default=0)
 
     def push(t, kind, payload):
         nonlocal seq
@@ -166,6 +205,16 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
             return begin + oh
         return t + oh
 
+    def admit(tid, t):
+        """Event gate for a fetched TD (past any fragment barrier)."""
+        td = s.tasks[tid]
+        if (td.dependent_event == NO_EVENT
+                or counters[td.dependent_event]
+                >= td.dependent_threshold):
+            push(dispatch_at(t, td.rank), "start", tid)
+        else:
+            waiters[td.dependent_event].append(tid)
+
     def try_fetch(key, t):
         """Idle workers grab next TDs in order (§4.4 queue protocol)."""
         q = s.queues[key]
@@ -174,12 +223,10 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
             cursors[key] += 1
             idle[key] -= 1
             td = s.tasks[tid]
-            if (td.dependent_event == NO_EVENT
-                    or counters[td.dependent_event]
-                    >= td.dependent_threshold):
-                push(dispatch_at(t, td.rank), "start", tid)
+            if fragment_barrier and frag_of(td) > open_frag:
+                barrier_waiters[frag_of(td)].append(tid)
             else:
-                waiters[td.dependent_event].append(tid)
+                admit(tid, t)
 
     def start_task(tid, t):
         td = s.tasks[tid]
@@ -204,6 +251,16 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
         busy[key] += dur
         if td.queue_type == CTQ:
             cube_busy_intervals.append((begin, end))
+        ph = _phase_of(td)
+        phase_busy[ph] += dur
+        if ph == "dispatch":
+            d2c[0] = begin if d2c[0] is None else min(d2c[0], begin)
+        elif ph == "combine":
+            d2c[1] = end if d2c[1] is None else max(d2c[1], end)
+        fr = td.meta.get("fragment")
+        if fr is not None:
+            lo, hi = frag_span.get(fr, (begin, end))
+            frag_span[fr] = (min(lo, begin), max(hi, end))
         timeline.append((begin, end, td.rank, td.queue_type, td.op_name))
         push(end, "finish", tid)
 
@@ -220,6 +277,14 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
             done += 1
             key = (td.rank, td.queue_type)
             idle[key] += 1
+            if fragment_barrier:
+                f = frag_of(td)
+                frag_done[f] += 1
+                while (open_frag in frag_total
+                       and frag_done[open_frag] >= frag_total[open_frag]):
+                    open_frag += 1
+                    for w in barrier_waiters.pop(open_frag, []):
+                        admit(w, now)
             if td.trigger_event != NO_EVENT:
                 eid = td.trigger_event
                 counters[eid] += 1
@@ -241,11 +306,16 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
     # Straggler is over the whole EP group: a rank with zero tasks (fully
     # starved by the plan) must drag the mean down, not vanish from it.
     straggler, crit = _straggler(busy, range(s.ep))
+    d2c_us = (d2c[1] - d2c[0]
+              if d2c[0] is not None and d2c[1] is not None else makespan)
     return SimResult(makespan_us=makespan, busy_us=dict(busy),
                      mac_ratio=mac_ratio, exposed_comm_us=exposed,
                      l2_hits=l2_stats[0], l2_lookups=l2_stats[1],
                      timeline=timeline, straggler_ratio=straggler,
-                     critical_rank=crit)
+                     critical_rank=crit, phase_us=dict(phase_busy),
+                     dispatch_to_combine_us=d2c_us,
+                     fragment_makespan_us={f: hi - lo for f, (lo, hi)
+                                           in sorted(frag_span.items())})
 
 
 def _straggler(busy: dict, ranks) -> tuple[float, int]:
@@ -327,8 +397,11 @@ def simulate_baseline(s: Schedule, hw: AscendA3 = AscendA3(), *,
     busy: dict = defaultdict(float)
     timeline = []
     comm_iv, cube_iv = [], []
+    phase_busy: dict = defaultdict(float)
+    d2c = [None, None]
     for kind in phase_order:
         tds = phases[kind]
+        ph = _phase_of(tds[0])
         is_comm = tds[0].task_type == "put_mem_signal"
         if is_comm:
             # Host-synchronized collective AllToAllV. Unlike one-sided
@@ -352,6 +425,12 @@ def simulate_baseline(s: Schedule, hw: AscendA3 = AscendA3(), *,
             dur = pack_t + link_t + hw.collective_host_us
             timeline.append((now, now + dur, -1, "COLL", kind))
             comm_iv.append((now + pack_t / 2, now + pack_t / 2 + link_t))
+            phase_busy[ph] += dur
+            if ph == "dispatch":
+                d2c[0] = now if d2c[0] is None else min(d2c[0], now)
+            elif ph == "combine":
+                d2c[1] = (now + dur if d2c[1] is None
+                          else max(d2c[1], now + dur))
             now += dur + hw.kernel_launch_us
             continue
         # Full-device kernel phase. Production operators balance their own
@@ -372,15 +451,19 @@ def simulate_baseline(s: Schedule, hw: AscendA3 = AscendA3(), *,
                 cube_iv.append((now, rank_end))
             phase_end = max(phase_end, rank_end)
         timeline.append((now, phase_end, -1, tds[0].queue_type, kind))
+        phase_busy[ph] += phase_end - now
         now = phase_end + hw.kernel_launch_us
 
     makespan = now - hw.kernel_launch_us
     cube_busy = sum(v for k, v in busy.items() if k[1] == CTQ)
     mac_ratio = cube_busy / (makespan * len(ranks) * hw.num_aic)
     straggler, crit = _straggler(busy, range(s.ep))
+    d2c_us = (d2c[1] - d2c[0]
+              if d2c[0] is not None and d2c[1] is not None else makespan)
     return SimResult(makespan_us=makespan, busy_us=dict(busy),
                      mac_ratio=mac_ratio,
                      exposed_comm_us=_exposed_time(comm_iv, cube_iv),
                      l2_hits=l2_stats[0], l2_lookups=l2_stats[1],
                      timeline=timeline, straggler_ratio=straggler,
-                     critical_rank=crit)
+                     critical_rank=crit, phase_us=dict(phase_busy),
+                     dispatch_to_combine_us=d2c_us)

@@ -101,7 +101,12 @@ def _td_from_dict(d: dict) -> TaskDescriptor:
 
 
 def schedule_to_ssc(s: Schedule) -> bytes:
-    """Serialize a full (all-rank) schedule."""
+    """Serialize a full (all-rank) schedule.
+
+    Multi-fragment schedules (``core/fusion.FusedSchedule``) additionally
+    carry their fragment table; the payload stays version 1 — readers
+    without fusion support would still decode a valid plain Schedule.
+    """
     payload = {
         "version": 1,
         "direction": s.direction,
@@ -115,6 +120,12 @@ def schedule_to_ssc(s: Schedule) -> bytes:
         "queues": [{"rank": r, "qtype": q, "tids": tids}
                    for (r, q), tids in sorted(s.queues.items())],
     }
+    fragments = getattr(s, "fragments", None)
+    if fragments:
+        payload["fragments"] = [
+            {"index": f.index, "label": f.label, "tid_lo": f.tid_lo,
+             "tid_hi": f.tid_hi, "boundary_tids": list(f.boundary_tids)}
+            for f in fragments]
     return msgpack.packb(payload, use_bin_type=True)
 
 
@@ -126,6 +137,15 @@ def ssc_to_schedule(blob: bytes) -> Schedule:
                             producers=tuple(v["producers"]))
               for k, v in p["events"].items()}
     queues = {(e["rank"], e["qtype"]): list(e["tids"]) for e in p["queues"]}
+    if p.get("fragments"):
+        from .fusion import Fragment, FusedSchedule   # lazy: avoid cycle
+        frags = tuple(Fragment(index=f["index"], label=f["label"],
+                               tid_lo=f["tid_lo"], tid_hi=f["tid_hi"],
+                               boundary_tids=tuple(f["boundary_tids"]))
+                      for f in p["fragments"])
+        return FusedSchedule(direction=p["direction"], ep=p["ep"],
+                             tasks=tasks, events=events, queues=queues,
+                             opts=p.get("opts", {}), fragments=frags)
     return Schedule(direction=p["direction"], ep=p["ep"], tasks=tasks,
                     events=events, queues=queues, opts=p.get("opts", {}))
 
@@ -167,6 +187,9 @@ class SSCCache:
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self._cache: OrderedDict[tuple, bytes] = OrderedDict()
+        # Fragment count per cached blob (parallel to _cache, which stays a
+        # plain key -> bytes map — debug consumers index it directly).
+        self._frags: dict[tuple, int] = {}
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
@@ -228,10 +251,54 @@ class SSCCache:
                 from .buckets import BucketSpec
                 sched.opts["bucket"] = BucketSpec.from_any(cfg.bucket).spec()
             blob = schedule_to_ssc(sched)
-            self._cache[k] = blob
-            while len(self._cache) > self.max_entries:
-                self._cache.popitem(last=False)
-                self.evictions += 1
+            self._insert(k, blob, fragments=1)
+        else:
+            self.hits += 1
+            self._cache.move_to_end(k)
+        return ssc_to_schedule(blob)
+
+    def _insert(self, k: tuple, blob: bytes, fragments: int) -> None:
+        self._cache[k] = blob
+        self._frags[k] = fragments
+        while len(self._cache) > self.max_entries:
+            ek, _ = self._cache.popitem(last=False)
+            self._frags.pop(ek, None)
+            self.evictions += 1
+
+    def get_or_compile_fused(self, cfgs, direction: str, pipeline=None,
+                             pipelines=None,
+                             fused_pipeline=("fuse_boundary",),
+                             boundary_split: Optional[int] = None,
+                             **opts) -> Schedule:
+        """Fused multi-layer twin of :meth:`get_or_compile`.
+
+        ``cfgs`` are the per-layer configs in *layer* order; the cache key
+        is the tuple of the per-layer keys (each resolved exactly as the
+        unfused path resolves it, so per-layer ``pipeline="auto"`` works)
+        plus the fused pipeline and boundary tiling. One multi-fragment
+        blob per distinct plan tuple; ``info()`` reports its fragment
+        count next to its byte size.
+        """
+        from .fusion import DEFAULT_BOUNDARY_SPLIT, compile_fused
+        if boundary_split is None:
+            boundary_split = DEFAULT_BOUNDARY_SPLIT
+        if pipelines is None:
+            pipelines = [pipeline] * len(cfgs)
+        resolved = [self._resolve(c, direction, p, opts)
+                    for c, p in zip(cfgs, pipelines)]
+        fp = resolve_pipeline(fused_pipeline)
+        k = ("fused", direction, fp.key(), boundary_split,
+             tuple(self.key(c, direction, pipeline=p)
+                   for (c, p) in resolved))
+        blob = self._cache.get(k)
+        if blob is None:
+            self.misses += 1
+            fs = compile_fused([c for (c, _) in resolved], direction,
+                               pipelines=[p for (_, p) in resolved],
+                               fused_pipeline=fp,
+                               boundary_split=boundary_split)
+            blob = schedule_to_ssc(fs)
+            self._insert(k, blob, fragments=len(cfgs))
         else:
             self.hits += 1
             self._cache.move_to_end(k)
@@ -258,11 +325,19 @@ class SSCCache:
         return padded / exact if exact else 1.0
 
     def info(self) -> dict:
-        """Occupancy + counter snapshot (for logs and capacity planning)."""
+        """Occupancy + counter snapshot (for logs and capacity planning).
+
+        ``per_entry`` itemizes each resident blob's byte size and fragment
+        count (LRU order, oldest first) — multi-fragment blobs are several
+        times a per-layer blob, so capacity planning needs to see them.
+        """
         return {
             "entries": len(self._cache),
             "max_entries": self.max_entries,
             "bytes": sum(len(b) for b in self._cache.values()),
+            "per_entry": [{"bytes": len(b),
+                           "fragments": self._frags.get(k, 1)}
+                          for k, b in self._cache.items()],
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,

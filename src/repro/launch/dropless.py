@@ -352,3 +352,282 @@ def _make_impl(dc: DroplessConfig, cache: SSCCache):
         return y.astype(x.dtype).reshape(B, S, d)
 
     return moe_impl
+
+
+# ---------------------------------------------------------------------------
+# Fused two-layer block: one multi-fragment taskflow per direction.
+# ---------------------------------------------------------------------------
+
+
+class FusedDroplessMoE:
+    """Two consecutive dropless MoE layers as one fused taskflow.
+
+    Fragment boundary contract (parallel routers): *both* layers' routers
+    are evaluated on the block input ``x``, so both routing plans — and
+    therefore the complete multi-fragment taskflow, boundary tiles
+    included — are known before the first dispatch launches. The
+    inter-layer token remap (layer 0's combine-weighted gather composed
+    with layer 1's send-buffer scatter) is exactly rank-local, so it runs
+    as LayerBoundary tiles *inside* the taskflow and layer 1's dispatch
+    traffic overlaps layer 0's combine tail.
+
+    ``fuse=False`` keeps identical parallel-router semantics but executes
+    the two per-layer schedules back to back with host bridge ops in
+    between — the bit-exact sequential twin the fused path is tested
+    against (fwd and bwd).
+    """
+
+    def __init__(self, dc: DroplessConfig, act: str = "swiglu",
+                 cache: Optional[SSCCache] = None, fuse: bool = True):
+        if act != "swiglu":
+            raise ValueError(
+                f"dropless schedules execute the SwiGLU fragment; act={act!r}")
+        self.dc = dc
+        self.fuse = fuse
+        self.cache = cache if cache is not None else get_process_cache(
+            dc.cache_entries)
+        self.impl = _make_fused_impl(dc, self.cache, fuse)
+
+
+def _make_fused_impl(dc: DroplessConfig, cache: SSCCache, fuse: bool):
+    """Build ``block_impl(params, x, mc)`` for a fused two-layer block.
+
+    ``params`` is a two-element sequence of per-layer dicts, each with
+    ``router`` / ``w_in`` / ``w_down``.
+    """
+
+    def block_impl(params, x, mc):
+        from repro.models.moe import router_topk
+
+        p_lo, p_hi = params
+        B, S, d = x.shape
+        T = B * S
+        if T % dc.ep:
+            raise ValueError(f"T={T} tokens not divisible by dropless "
+                             f"ep={dc.ep}")
+        xt = x.reshape(T, d)
+        # Parallel-router contract: both plans derive from the block input.
+        tp0, ti0 = router_topk(p_lo["router"], xt, mc)
+        tp1, ti1 = router_topk(p_hi["router"], xt, mc)
+
+        f = mc.d_expert
+        e_loc = mc.e_total // dc.ep
+        t_loc = T // dc.ep
+        k = mc.top_k
+
+        def _shape_w(w_in_h, w_down_h):
+            w1 = np.asarray(w_in_h, np.float32).reshape(
+                dc.ep, e_loc, d, 2 * f)
+            w2 = np.asarray(w_down_h, np.float32).reshape(
+                dc.ep, e_loc, f, d)
+            return w1, w2
+
+        def _dy_of(plan, rows, tp3, g3):
+            # Per-row cotangent entering a backward fragment — statement
+            # for statement the single-layer bwd_host build, so fused and
+            # sequential stay bit-identical.
+            dy = [np.zeros((plan.send_rows(s), d), np.float32)
+                  for s in range(dc.ep)]
+            for s in range(dc.ep):
+                r = rows[s].reshape(-1)
+                valid = r >= 0
+                contrib = (tp3[s][:, :, None] * g3[s][:, None, :]).reshape(
+                    -1, d)
+                np.add.at(dy[s], r[valid], contrib[valid])
+            return dy
+
+        def _token_grads(bridge, dx_ret, y_ret, g3, tp3):
+            # (dx_tokens, dtop_p) of one layer from its dx_ret buffers —
+            # same j-loop accumulation order as the single-layer bwd_host.
+            dx_tok = np.zeros((dc.ep, t_loc, d), np.float32)
+            dtp = np.zeros((dc.ep, t_loc, k), np.float32)
+            for s in range(dc.ep):
+                if not bridge.plan.send_rows(s):
+                    continue
+                for j in range(k):
+                    r = bridge.send_row[s, :, j]
+                    valid = r >= 0
+                    dx_tok[s, valid] += dx_ret[s][r[valid]]
+                    dtp[s, valid, j] = np.einsum(
+                        "td,td->t", g3[s, valid], y_ret[s][r[valid]])
+            return dx_tok, dtp
+
+        def _ret_bufs(st, tensor, plan):
+            return [st.get(tensor, r) if plan.send_rows(r)
+                    else np.zeros((0, d), np.float32) for r in range(dc.ep)]
+
+        # ---- host callbacks ------------------------------------------------
+        def fwd_host(xt_h, tp0_h, ti0_h, tp1_h, ti1_h,
+                     win0, wdn0, win1, wdn1):
+            from repro.core import executor as ex
+            from repro.core import fusion as fu
+            from repro.models.moe import (bridge_combine, bridge_dispatch,
+                                          fused_boundary_forward)
+
+            xt_h = np.asarray(xt_h, np.float32)
+            tp0_h = np.asarray(tp0_h, np.float32)
+            tp1_h = np.asarray(tp1_h, np.float32)
+            w10, w20 = _shape_w(win0, wdn0)
+            w11, w21 = _shape_w(win1, wdn1)
+            b0 = _bridge_of(dc, ti0_h, mc, cache)
+            b1 = _bridge_of(dc, ti1_h, mc, cache)
+            cfg0 = _schedule_cfg(dc, b0.plan, d, f)
+            cfg1 = _schedule_cfg(dc, b1.plan, d, f)
+
+            x_src = bridge_dispatch(b0, xt_h.reshape(dc.ep, t_loc, d))
+            if fuse:
+                fs = cache.get_or_compile_fused(
+                    [cfg0, cfg1], "forward", pipeline=dc.pipeline_spec())
+                st = ex.ExecutorState(cfg0, fragment_cfgs=[cfg0, cfg1])
+                fu.load_fused_forward_state(fs, [cfg0, cfg1], st, x_src,
+                                            [w10, w11], [w20, w21])
+                st.boundary_fns = {
+                    (0, r): fn for r, fn in fused_boundary_forward(
+                        b0, b1, tp0_h, d).items()}
+                ex.execute(fs, st, rng=np.random.default_rng(0))
+                y_ret1 = _ret_bufs(st, "y_ret#L1", b1.plan)
+            else:
+                s0 = cache.get_or_compile(cfg0, "forward",
+                                          pipeline=dc.pipeline_spec())
+                st0 = ex.ExecutorState(cfg0)
+                ex.load_forward_state_plan(cfg0, st0, x_src, w10, w20)
+                ex.execute(s0, st0, rng=np.random.default_rng(0))
+                y0 = bridge_combine(b0, _ret_bufs(st0, "y_ret", b0.plan),
+                                    tp0_h)
+                s1 = cache.get_or_compile(cfg1, "forward",
+                                          pipeline=dc.pipeline_spec())
+                st1 = ex.ExecutorState(cfg1)
+                ex.load_forward_state_plan(cfg1, st1,
+                                           bridge_dispatch(b1, y0), w11, w21)
+                ex.execute(s1, st1, rng=np.random.default_rng(0))
+                y_ret1 = _ret_bufs(st1, "y_ret", b1.plan)
+            y = bridge_combine(b1, y_ret1, tp1_h)
+            return y.reshape(T, d)
+
+        def bwd_host(xt_h, tp0_h, ti0_h, tp1_h, ti1_h,
+                     win0, wdn0, win1, wdn1, g_h):
+            from repro.core import executor as ex
+            from repro.core import fusion as fu
+            from repro.models.moe import (bridge_combine, bridge_dispatch,
+                                          fused_boundary_backward)
+
+            xt_h = np.asarray(xt_h, np.float32)
+            tp0_h = np.asarray(tp0_h, np.float32)
+            tp1_h = np.asarray(tp1_h, np.float32)
+            g = np.asarray(g_h, np.float32)
+            w10, w20 = _shape_w(win0, wdn0)
+            w11, w21 = _shape_w(win1, wdn1)
+            b0 = _bridge_of(dc, ti0_h, mc)
+            b1 = _bridge_of(dc, ti1_h, mc)
+            cfg0 = _schedule_cfg(dc, b0.plan, d, f)
+            cfg1 = _schedule_cfg(dc, b1.plan, d, f)
+            g3 = g.reshape(dc.ep, t_loc, d)
+            tp03 = tp0_h.reshape(dc.ep, t_loc, k)
+            tp13 = tp1_h.reshape(dc.ep, t_loc, k)
+
+            # Recompute both layers' saved activations.
+            x_src0 = bridge_dispatch(b0, xt_h.reshape(dc.ep, t_loc, d))
+            fwd0 = ex.reference_forward_plan(cfg0, x_src0, w10, w20)
+            y0 = bridge_combine(b0, fwd0["y_ret"], tp0_h)
+            fwd1 = ex.reference_forward_plan(cfg1, bridge_dispatch(b1, y0),
+                                             w11, w21)
+            dy1 = _dy_of(b1.plan, b1.send_row, tp13, g3)
+
+            if fuse:
+                fs = cache.get_or_compile_fused(
+                    [cfg0, cfg1], "backward", pipeline=dc.pipeline_spec())
+                st = ex.ExecutorState(cfg1, fragment_cfgs=[cfg1, cfg0])
+                fu.load_fused_backward_state(fs, [cfg1, cfg0], st, dy1,
+                                             [fwd1, fwd0], [w11, w10],
+                                             [w21, w20])
+                st.boundary_fns = {
+                    (0, r): fn for r, fn in fused_boundary_backward(
+                        b0, b1, tp0_h, d).items()}
+                ex.execute(fs, st, rng=np.random.default_rng(0))
+                dx1_tok, dtp1 = _token_grads(
+                    b1, _ret_bufs(st, "dx_ret#L1", b1.plan),
+                    fwd1["y_ret"], g3, tp13)
+                dx0_tok, dtp0 = _token_grads(
+                    b0, _ret_bufs(st, "dx_ret#L0", b0.plan),
+                    fwd0["y_ret"], dx1_tok, tp03)
+                sts = {0: st, 1: st}
+                suff = {0: "#L0", 1: "#L1"}
+            else:
+                s1 = cache.get_or_compile(cfg1, "backward",
+                                          pipeline=dc.pipeline_spec())
+                st1 = ex.ExecutorState(cfg1)
+                ex.load_backward_state_plan(cfg1, st1, fwd1, w11, w21, dy1)
+                ex.execute(s1, st1, rng=np.random.default_rng(0))
+                dx1_tok, dtp1 = _token_grads(
+                    b1, _ret_bufs(st1, "dx_ret", b1.plan),
+                    fwd1["y_ret"], g3, tp13)
+                dy0 = _dy_of(b0.plan, b0.send_row, tp03, dx1_tok)
+                s0 = cache.get_or_compile(cfg0, "backward",
+                                          pipeline=dc.pipeline_spec())
+                st0 = ex.ExecutorState(cfg0)
+                ex.load_backward_state_plan(cfg0, st0, fwd0, w10, w20, dy0)
+                ex.execute(s0, st0, rng=np.random.default_rng(0))
+                dx0_tok, dtp0 = _token_grads(
+                    b0, _ret_bufs(st0, "dx_ret", b0.plan),
+                    fwd0["y_ret"], dx1_tok, tp03)
+                sts = {0: st0, 1: st1}
+                suff = {0: "", 1: ""}
+
+            def _dw(layer, plan):
+                st_l = sts[layer]
+                s = suff[layer]
+                dw1 = np.stack([st_l.get(f"dW1{s}", r) if plan.recv_rows(r)
+                                else np.zeros((e_loc, d, 2 * f), np.float32)
+                                for r in range(dc.ep)])
+                dw2 = np.stack([st_l.get(f"dW2{s}", r) if plan.recv_rows(r)
+                                else np.zeros((e_loc, f, d), np.float32)
+                                for r in range(dc.ep)])
+                return (dw1.reshape(mc.e_total, d, 2 * f),
+                        dw2.reshape(mc.e_total, f, d))
+
+            dw1_0, dw2_0 = _dw(0, b0.plan)
+            dw1_1, dw2_1 = _dw(1, b1.plan)
+            return (dx0_tok.reshape(T, d), dtp0.reshape(T, k),
+                    dtp1.reshape(T, k), dw1_0, dw2_0, dw1_1, dw2_1)
+
+        # ---- custom-vjp fused fragment ------------------------------------
+        @jax.custom_vjp
+        def fragment(xt, tp0, ti0, tp1, ti1, w_in0, w_down0, w_in1, w_down1):
+            return jax.pure_callback(
+                fwd_host, jax.ShapeDtypeStruct((T, d), jnp.float32),
+                xt, tp0, ti0, tp1, ti1, w_in0, w_down0, w_in1, w_down1)
+
+        def fragment_fwd(xt, tp0, ti0, tp1, ti1,
+                         w_in0, w_down0, w_in1, w_down1):
+            y = fragment(xt, tp0, ti0, tp1, ti1,
+                         w_in0, w_down0, w_in1, w_down1)
+            return y, (xt, tp0, ti0, tp1, ti1,
+                       w_in0, w_down0, w_in1, w_down1)
+
+        def fragment_bwd(res, g):
+            xt, tp0, ti0, tp1, ti1, w_in0, w_down0, w_in1, w_down1 = res
+            out = jax.pure_callback(
+                bwd_host,
+                (jax.ShapeDtypeStruct((T, d), jnp.float32),
+                 jax.ShapeDtypeStruct((T, k), jnp.float32),
+                 jax.ShapeDtypeStruct((T, k), jnp.float32),
+                 jax.ShapeDtypeStruct(w_in0.shape, jnp.float32),
+                 jax.ShapeDtypeStruct(w_down0.shape, jnp.float32),
+                 jax.ShapeDtypeStruct(w_in1.shape, jnp.float32),
+                 jax.ShapeDtypeStruct(w_down1.shape, jnp.float32)),
+                xt, tp0, ti0, tp1, ti1, w_in0, w_down0, w_in1, w_down1, g)
+            dxt, dtp0, dtp1, dw1_0, dw2_0, dw1_1, dw2_1 = out
+            f0 = lambda t: np.zeros(t.shape, dtype=jax.dtypes.float0)
+            return (dxt.astype(xt.dtype), dtp0.astype(tp0.dtype), f0(ti0),
+                    dtp1.astype(tp1.dtype), f0(ti1),
+                    dw1_0.astype(w_in0.dtype), dw2_0.astype(w_down0.dtype),
+                    dw1_1.astype(w_in1.dtype), dw2_1.astype(w_down1.dtype))
+
+        fragment.defvjp(fragment_fwd, fragment_bwd)
+
+        y = fragment(xt, tp0, ti0, tp1, ti1,
+                     p_lo["w_in"], p_lo["w_down"],
+                     p_hi["w_in"], p_hi["w_down"])
+        return y.astype(x.dtype).reshape(B, S, d)
+
+    return block_impl

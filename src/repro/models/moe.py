@@ -316,6 +316,89 @@ def bridge_combine(bridge: RoutingBridge, y_ret: list, top_p) -> np.ndarray:
     return y
 
 
+def fused_boundary_forward(bridge_out: RoutingBridge,
+                           bridge_in: RoutingBridge,
+                           top_p_out, d_model: int) -> dict:
+    """Per-rank remap fns for one forward junction of a fused schedule.
+
+    The junction composes layer i's combine-weighted gather (the rank-r
+    slice of :func:`bridge_combine` under ``bridge_out``/``top_p_out``)
+    with layer i+1's send-buffer scatter (the rank-r slice of
+    :func:`bridge_dispatch` under ``bridge_in``). Both ops are exactly
+    rank-local — a token's returned rows and its next-layer send rows live
+    on its own source rank — so the per-rank restriction is *bitwise*
+    identical to running the full ops sequentially; the loops below mirror
+    them statement for statement to keep it that way.
+
+    Returns ``{rank: fn}`` with the executor's LayerBoundary contract
+    ``fn(full_y_ret_or_None, lo, hi) -> [hi - lo, d_model]``; the full
+    remap is memoized per rank, so tile granularity costs nothing.
+    """
+    tp = np.asarray(top_p_out, dtype=np.float32).reshape(
+        bridge_out.send_row.shape)
+    ep, t_loc, k_out = bridge_out.send_row.shape
+    k_in = bridge_in.send_row.shape[2]
+    fns = {}
+    for r in range(ep):
+        def fn(data, lo, hi, r=r, _memo={}):
+            if "buf" not in _memo:
+                y = np.zeros((t_loc, d_model), dtype=np.float32)
+                for j in range(k_out):
+                    rows = bridge_out.send_row[r, :, j]
+                    valid = rows >= 0
+                    if valid.any():
+                        y[valid] += tp[r, valid, j, None] * data[rows[valid]]
+                buf = np.zeros((bridge_in.plan.send_rows(r), d_model),
+                               dtype=np.float32)
+                rows = bridge_in.send_row[r].reshape(-1)
+                valid = rows >= 0
+                buf[rows[valid]] = np.repeat(y, k_in, axis=0)[valid]
+                _memo["buf"] = buf
+            return _memo["buf"][lo:hi]
+        fns[r] = fn
+    return fns
+
+
+def fused_boundary_backward(bridge_out: RoutingBridge,
+                            bridge_in: RoutingBridge,
+                            top_p_out, d_model: int) -> dict:
+    """Backward twin of :func:`fused_boundary_forward`.
+
+    Maps ``dx_ret`` of layer i+1's backward fragment (gradient w.r.t. that
+    layer's send buffer) to ``dy_src`` of layer i's (gradient w.r.t. its
+    return buffer): gather-sum the dispatched copies back to tokens
+    (dispatch transpose), then scatter the combine weights' products into
+    the upstream send layout (combine transpose). Rank-local for the same
+    reason as the forward; mirrors the dropless backward host's
+    accumulation statements bit for bit.
+    """
+    tp = np.asarray(top_p_out, dtype=np.float32).reshape(
+        bridge_out.send_row.shape)
+    ep, t_loc, k_out = bridge_out.send_row.shape
+    k_in = bridge_in.send_row.shape[2]
+    fns = {}
+    for r in range(ep):
+        def fn(data, lo, hi, r=r, _memo={}):
+            if "buf" not in _memo:
+                dx_tok = np.zeros((t_loc, d_model), dtype=np.float32)
+                for j in range(k_in):
+                    rows = bridge_in.send_row[r, :, j]
+                    valid = rows >= 0
+                    if valid.any():
+                        dx_tok[valid] += data[rows[valid]]
+                dy = np.zeros((bridge_out.plan.send_rows(r), d_model),
+                              dtype=np.float32)
+                rows = bridge_out.send_row[r].reshape(-1)
+                valid = rows >= 0
+                contrib = (tp[r][:, :, None] * dx_tok[:, None, :]).reshape(
+                    -1, d_model)
+                np.add.at(dy, rows[valid], contrib[valid])
+                _memo["buf"] = dy
+            return _memo["buf"][lo:hi]
+        fns[r] = fn
+    return fns
+
+
 def moe_grouped(params, x, mc: MoEConfig, act: str = "swiglu",
                 cap: Optional[int] = None, gmm_fn=None):
     """Sorted/capacity dispatch → grouped FFN → weighted combine.

@@ -1,0 +1,269 @@
+"""Cross-layer schedule fusion: multi-fragment taskflow legality and parity.
+
+The fusion contract (``core/fusion.py``): stitching K per-layer schedules
+into one ``FusedSchedule`` must (1) stay acyclic and deadlock-free for *any*
+pair of real plans — proved by ``validate_schedule`` plus an event-driven
+simulation per example, (2) execute bit-identically to sequential per-layer
+execution with the boundary remap applied on the host between layers, fwd
+and bwd, and (3) round-trip through the SSC blob with fragments intact.
+The property test drives (1)+(2) over random skewed/sparse/hotspot plan
+pairs; deterministic tests pin the SSC/cache surface, the per-fragment cost
+diagnostics, the simulator's phase breakdown, and the fused dropless block.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import executor as ex
+from repro.core import fusion as fu
+from repro.core.costmodel import CostModel
+from repro.core.odg import ScheduleConfig
+from repro.core.routing import hotspot_plan, random_plan, skewed_plan
+from repro.core.scheduler import validate_schedule
+from repro.core.simulator import simulate_unified
+from repro.core.ssc import SSCCache, schedule_to_ssc, ssc_to_schedule
+
+from tests._proptest import given, settings, st
+
+EP = 3
+D = 8
+
+
+def _cfg(plan):
+    return ScheduleConfig(ep=plan.ep, e_loc=plan.e_loc, rows=0,
+                          d_model=D, d_ff=4, plan=plan)
+
+
+def _plan_of(kind, seed):
+    rng = np.random.default_rng(seed)
+    if kind == "skewed":
+        return skewed_plan(EP, 2, 6, 1.0 + (seed % 3) * 0.5)
+    if kind == "sparse":
+        return random_plan(EP, 2, 7, rng, p_zero=0.5)
+    return hotspot_plan(EP, 2, 4, background=seed % 3)
+
+
+def _matrix_boundary(M, transpose=False):
+    """Per-rank boundary fns applying a fixed matrix remap (or its
+    transpose) — the test stand-in for the combine∘dispatch token remap."""
+    def make(r):
+        A = M[r].T if transpose else M[r]
+
+        def fn(data, lo, hi, A=A):
+            if data is None:
+                data = np.zeros((A.shape[1], D), np.float32)
+            return (A @ data)[lo:hi]
+        return fn
+    return {(0, r): make(r) for r in M}
+
+
+KINDS = ("skewed", "sparse", "hotspot")
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(KINDS), st.sampled_from(KINDS),
+       st.integers(min_value=0, max_value=10_000))
+def test_fused_pair_acyclic_deadlock_free_bit_identical(kind0, kind1, seed):
+    plan0, plan1 = _plan_of(kind0, seed), _plan_of(kind1, seed + 1)
+    cfg0, cfg1 = _cfg(plan0), _cfg(plan1)
+    rng = np.random.default_rng(seed)
+    M = {r: rng.standard_normal(
+            (plan1.send_rows(r), plan0.send_rows(r))).astype(np.float32)
+         for r in range(EP)}
+
+    # ---- forward: legality + simulation + bit-exact execution ----------
+    fs = fu.compile_fused([cfg0, cfg1], "forward", pipeline=("ratr",))
+    validate_schedule(fs)               # acyclic, single-trigger, complete
+    res = simulate_unified(fs)          # deadlock-free: every task retires
+    assert res.makespan_us > 0
+    assert set(res.fragment_makespan_us) == {0, 1}
+
+    x_src, w10, w20 = ex.make_inputs_plan(cfg0, seed % 97)
+    _, w11, w21 = ex.make_inputs_plan(cfg1, (seed + 13) % 97)
+    ref0 = ex.reference_forward_plan(cfg0, x_src, w10, w20)
+    x_src1 = [M[r] @ ref0["y_ret"][r] for r in range(EP)]
+    ref1 = ex.reference_forward_plan(cfg1, x_src1, w11, w21)
+
+    stf = ex.ExecutorState(cfg0, fragment_cfgs=[cfg0, cfg1])
+    fu.load_fused_forward_state(fs, [cfg0, cfg1], stf, x_src,
+                                [w10, w11], [w20, w21])
+    stf.boundary_fns = _matrix_boundary(M)
+    ex.execute(fs, stf, rng=np.random.default_rng(seed))
+    for r in range(EP):
+        if plan0.send_rows(r):
+            np.testing.assert_array_equal(stf.get("y_ret#L0", r),
+                                          ref0["y_ret"][r])
+        if plan1.send_rows(r):
+            np.testing.assert_array_equal(stf.get("y_ret#L1", r),
+                                          ref1["y_ret"][r])
+
+    # ---- backward: reversed execution order, transposed boundary -------
+    fb = fu.compile_fused([cfg0, cfg1], "backward",
+                          pipeline=("ratr", "gmm_interleave"))
+    validate_schedule(fb)
+    resb = simulate_unified(fb)
+    assert set(resb.fragment_makespan_us) == {0, 1}
+    assert [f.label for f in fb.fragments] == ["L1", "L0"]
+
+    dy1 = [rng.standard_normal(ref1["y_ret"][r].shape).astype(np.float32)
+           for r in range(EP)]
+    dx1, dw11_ref, dw21_ref = ex.reference_backward_plan(
+        cfg1, ref1, w11, w21, dy1)
+    dy0 = [M[r].T @ dx1[r] for r in range(EP)]
+    dx0, dw10_ref, dw20_ref = ex.reference_backward_plan(
+        cfg0, ref0, w10, w20, dy0)
+
+    stb = ex.ExecutorState(cfg1, fragment_cfgs=[cfg1, cfg0])
+    fu.load_fused_backward_state(fb, [cfg1, cfg0], stb, dy1,
+                                 [ref1, ref0], [w11, w10], [w21, w20])
+    stb.boundary_fns = _matrix_boundary(M, transpose=True)
+    ex.execute(fb, stb, rng=np.random.default_rng(seed + 1))
+    for r in range(EP):
+        if plan1.send_rows(r):
+            np.testing.assert_array_equal(stb.get("dx_ret#L1", r), dx1[r])
+        if plan0.send_rows(r):
+            np.testing.assert_array_equal(stb.get("dx_ret#L0", r), dx0[r])
+        if plan0.recv_rows(r):
+            np.testing.assert_array_equal(stb.get("dW1#L0", r), dw10_ref[r])
+            np.testing.assert_array_equal(stb.get("dW2#L0", r), dw20_ref[r])
+        if plan1.recv_rows(r):
+            np.testing.assert_array_equal(stb.get("dW1#L1", r), dw11_ref[r])
+            np.testing.assert_array_equal(stb.get("dW2#L1", r), dw21_ref[r])
+
+
+def test_identity_boundary_fallback():
+    """With equal plans and no boundary_fns, the executor's identity
+    fallback slices the upstream buffer — fused == chained layers."""
+    plan = skewed_plan(EP, 2, 6, 1.5)
+    cfg = _cfg(plan)
+    fs = fu.compile_fused([cfg, cfg], "forward")
+    x_src, w1, w2 = ex.make_inputs_plan(cfg, 3)
+    ref0 = ex.reference_forward_plan(cfg, x_src, w1, w2)
+    ref1 = ex.reference_forward_plan(cfg, ref0["y_ret"], w1, w2)
+    stf = ex.ExecutorState(cfg, fragment_cfgs=[cfg, cfg])
+    fu.load_fused_forward_state(fs, [cfg, cfg], stf, x_src,
+                                [w1, w1], [w2, w2])
+    ex.execute(fs, stf, rng=np.random.default_rng(0))
+    for r in range(EP):
+        if plan.send_rows(r):
+            np.testing.assert_array_equal(stf.get("y_ret#L1", r),
+                                          ref1["y_ret"][r])
+
+
+def test_boundary_tiles_cover_send_layout_in_whole_cells():
+    plan0 = hotspot_plan(EP, 2, 4, background=1)
+    plan1 = skewed_plan(EP, 2, 6, 2.0)
+    fs = fu.compile_fused([_cfg(plan0), _cfg(plan1)], "forward")
+    frag1 = fs.fragments[1]
+    assert frag1.boundary_tids
+    by_rank = {}
+    for tid in frag1.boundary_tids:
+        td = fs.tasks[tid]
+        assert td.task_type == "LayerBoundary"
+        assert td.meta == {"fragment": 1, "boundary": 0,
+                           "comm_kind": "boundary"}
+        by_rank.setdefault(td.rank, []).append(
+            (td.outputs[0].lo, td.outputs[0].hi))
+    for r, spans in by_rank.items():
+        spans.sort()
+        assert len(spans) <= fu.DEFAULT_BOUNDARY_SPLIT
+        assert spans[0][0] == 0 and spans[-1][1] == plan1.send_rows(r)
+        for (a, b), (c, _) in zip(spans, spans[1:]):
+            assert b == c                      # contiguous, gap-free
+        # whole-cell grouping: every tile edge is a cell edge
+        edges = {0}
+        off = 0
+        for (_, _, cnt) in plan1.send_cells(r):
+            off += cnt
+            edges.add(off)
+        assert all(lo in edges and hi in edges for lo, hi in spans)
+
+
+def test_fused_ssc_roundtrip_and_cache_info():
+    plan0 = skewed_plan(EP, 2, 6, 1.5)
+    plan1 = hotspot_plan(EP, 2, 4)
+    cfg0, cfg1 = _cfg(plan0), _cfg(plan1)
+    cache = SSCCache(max_entries=8)
+    fs = cache.get_or_compile_fused([cfg0, cfg1], "forward",
+                                    pipeline=("ratr",))
+    assert isinstance(fs, fu.FusedSchedule)
+    assert [f.label for f in fs.fragments] == ["L0", "L1"]
+    assert (cache.hits, cache.misses) == (0, 1)
+    # blob round-trip keeps the fragment table
+    back = ssc_to_schedule(schedule_to_ssc(fs))
+    assert isinstance(back, fu.FusedSchedule)
+    assert back.fragments == fs.fragments
+    assert len(back.tasks) == len(fs.tasks)
+    # repeat fetch hits; per-entry info reports bytes and fragment count
+    cache.get_or_compile_fused([cfg0, cfg1], "forward", pipeline=("ratr",))
+    assert (cache.hits, cache.misses) == (1, 1)
+    info = cache.info()
+    assert len(info["per_entry"]) == 1
+    assert info["per_entry"][0]["fragments"] == 2
+    assert info["per_entry"][0]["bytes"] > 0
+    # an unfused entry coexists and reports fragments=1
+    cache.get_or_compile(cfg0, "forward", pipeline=("ratr",))
+    assert sorted(e["fragments"] for e in cache.info()["per_entry"]) == [1, 2]
+
+
+def test_fragment_critical_ranks_are_per_fragment():
+    plan_hot = hotspot_plan(EP, 2, 4)          # all cube work on rank 0
+    plan_flat = skewed_plan(EP, 2, 6, 0.0)     # balanced
+    fs = fu.compile_fused([_cfg(plan_hot), _cfg(plan_flat)], "forward")
+    crits = CostModel(l2=False).fragment_critical_ranks(fs)
+    assert set(crits) == {0, 1}
+    ratio_hot, crit_hot = crits[0]
+    ratio_flat, _ = crits[1]
+    assert crit_hot == 0 and ratio_hot > 1.5
+    assert ratio_flat == pytest.approx(1.0)
+
+
+def test_simulator_phase_breakdown():
+    plan = skewed_plan(EP, 2, 6, 1.0)
+    cfg = _cfg(plan)
+    # single fragment: no boundary phase, one fragment span == makespan
+    s = fu.compile_fused([cfg], "forward")
+    r1 = simulate_unified(s)
+    assert "boundary" not in r1.phase_us
+    assert set(r1.fragment_makespan_us) == {0}
+    assert 0 < r1.dispatch_to_combine_us <= r1.makespan_us + 1e-9
+    # two fragments: boundary phase shows up, spans overlap-or-abut
+    fs = fu.compile_fused([cfg, cfg], "forward")
+    r2 = simulate_unified(fs)
+    assert r2.phase_us["boundary"] > 0
+    assert {"dispatch", "combine"} <= set(r2.phase_us)
+    assert 0 < r2.dispatch_to_combine_us <= r2.makespan_us + 1e-9
+    assert set(r2.fragment_makespan_us) == {0, 1}
+
+
+def test_fused_dropless_block_matches_sequential_twin():
+    """One fused two-layer dropless step == two sequential per-layer steps,
+    bit for bit, forward and backward (jax.grad through the custom vjp)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.dropless import DroplessConfig, FusedDroplessMoE
+    from repro.models.moe import MoEConfig, init_moe
+
+    mc = MoEConfig(n_experts=6, top_k=2, d_expert=8, capacity_factor=8.0)
+    d = 16
+    p0 = init_moe(jax.random.PRNGKey(0), d, mc)
+    p1 = init_moe(jax.random.PRNGKey(7), d, mc)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d), jnp.float32)
+
+    dc = DroplessConfig(ep=3, bucket_rows=4)
+    fused = FusedDroplessMoE(dc, cache=SSCCache(max_entries=8), fuse=True)
+    seq = FusedDroplessMoE(dc, cache=SSCCache(max_entries=8), fuse=False)
+
+    yf = fused.impl([p0, p1], x, mc)
+    ys = seq.impl([p0, p1], x, mc)
+    assert np.isfinite(np.asarray(yf)).all() and np.asarray(yf).any()
+    np.testing.assert_array_equal(np.asarray(yf), np.asarray(ys))
+
+    gf = jax.grad(lambda ps: jnp.sum(fused.impl(ps, x, mc) ** 2))((p0, p1))
+    gs = jax.grad(lambda ps: jnp.sum(seq.impl(ps, x, mc) ** 2))((p0, p1))
+    for a, b in zip(jax.tree.leaves(gf), jax.tree.leaves(gs)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # the fused handle compiled multi-fragment blobs, the twin per-layer ones
+    assert all(e["fragments"] == 2 for e in fused.cache.info()["per_entry"])
+    assert all(e["fragments"] == 1 for e in seq.cache.info()["per_entry"])
