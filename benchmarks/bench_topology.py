@@ -1,0 +1,108 @@
+"""Topology-aware hierarchical EP — two-level vs flat dispatch latency.
+
+Compiles each skew scenario twice against a 2-node cluster (ep=8, 4 ranks
+per node, 350 GB/s intra vs 50 GB/s inter links) and simulates both with
+the *same* topology-aware cost model:
+
+* **flat** — one put per nonzero (dst, expert) cell, every cross-node cell
+  paying its own inter-node hop latency (the seed's dispatch, now priced
+  on heterogeneous links);
+* **hier** — two-level dispatch (``dispatch_mode="hier"``): latency-bound
+  cross-node groups gather at a node-leader rank over the fast intra-node
+  links and take the slow hop as one aggregated message; byte-bound groups
+  stay on the direct path (``routing.aggregate_group``), keeping per-cell
+  compute overlap.
+
+The dispatch-to-combine win is gated: hier must strictly beat flat on at
+least two of the three skew scenarios, otherwise the run fails (CI
+regression gate for the topology stack). The int8-compressed inter-node
+variant is emitted as context, as is the cost-model selector's pick —
+gated only on *never* choosing a candidate predicted worse than the best
+flat candidate (the never-worse-than-flat contract of the hier grid).
+"""
+
+from __future__ import annotations
+
+from repro.core import autoselect
+from repro.core.costmodel import CostModel
+from repro.core.hardware import AscendA3, Topology
+from repro.core.odg import ScheduleConfig, build_moe_ffn_forward
+from repro.core.routing import hotspot_plan, node_limited_plan, skewed_plan
+from repro.core.scheduler import compile_schedule
+from repro.core.simulator import simulate_unified
+
+from .common import emit
+
+EP, E_LOC, ROWS = 8, 8, 16
+D_MODEL, D_FF = 1024, 256
+M_SPLIT = 4
+TOPO = Topology(ranks_per_node=4, intra_gbps=350.0, inter_gbps=50.0,
+                intra_hop_us=0.35, inter_hop_us=2.0)
+PIPELINE = ["ratr", "hier_dispatch"]
+WINS_REQUIRED = 2
+
+
+def _cases():
+    yield "zipf", skewed_plan(EP, E_LOC, ROWS, 1.6)
+    yield "hotspot", hotspot_plan(EP, E_LOC, ROWS, background=2)
+    yield "node_limited", node_limited_plan(EP, E_LOC, ROWS,
+                                            node_size=TOPO.ranks_per_node)
+
+
+def _cfg(plan, **kw) -> ScheduleConfig:
+    return ScheduleConfig(ep=EP, e_loc=E_LOC, rows=0, d_model=D_MODEL,
+                          d_ff=D_FF, gmm_m_split=M_SPLIT,
+                          gmm_split_mode="source_aligned", plan=plan,
+                          topology=TOPO, **kw)
+
+
+def _d2c(cfg, hw, cost):
+    s = compile_schedule(build_moe_ffn_forward(cfg), pipeline=PIPELINE)
+    return simulate_unified(s, hw, cost=cost)
+
+
+def run(hw: AscendA3 = AscendA3()) -> None:
+    cost = CostModel(hw=hw, topology=TOPO)
+    wins = 0
+    for name, plan in _cases():
+        flat = _d2c(_cfg(plan), hw, cost)
+        hier = _d2c(_cfg(plan, dispatch_mode="hier"), hw, cost)
+        hier_c = _d2c(_cfg(plan, dispatch_mode="hier",
+                           xnode_compress="int8"), hw, cost)
+        f, h = flat.dispatch_to_combine_us, hier.dispatch_to_combine_us
+        win_pct = (f - h) / max(1e-9, f) * 100
+        won = h < f
+        wins += won
+        emit(f"topology_{name}_flat", f,
+             f"inter_busy={flat.link_us.get('inter', 0.0):.1f}us "
+             f"intra_busy={flat.link_us.get('intra', 0.0):.1f}us")
+        emit(f"topology_{name}_hier", h,
+             f"win={win_pct:+.2f}% "
+             f"inter_busy={hier.link_us.get('inter', 0.0):.1f}us "
+             f"intra_busy={hier.link_us.get('intra', 0.0):.1f}us")
+        emit(f"topology_{name}_hier_int8", hier_c.dispatch_to_combine_us,
+             f"context=inter-node wire bytes halved "
+             f"inter_busy={hier_c.link_us.get('inter', 0.0):.1f}us")
+
+        # Selector contract: with a Topology in the config, auto-selection
+        # prices flat and hier candidates on the same per-link-class model
+        # and must never pick one predicted worse than the best flat.
+        choice = autoselect.select(None, _cfg(plan))
+        flat_best = min(s.predicted_us for s in choice.scores
+                        if s.cfg.dispatch_mode == "flat")
+        emit(f"topology_{name}_auto_pred", choice.predicted_us,
+             f"pick={choice.tag} flat_best={flat_best:.1f}us")
+        if choice.predicted_us > flat_best:
+            raise RuntimeError(
+                f"auto-selection picked {choice.tag} predicted at "
+                f"{choice.predicted_us:.1f}us, worse than the best flat "
+                f"candidate ({flat_best:.1f}us) on scenario {name!r}")
+    emit("topology_scenario_wins", float(wins), f"required>={WINS_REQUIRED}of3")
+    if wins < WINS_REQUIRED:
+        raise RuntimeError(
+            f"hierarchical dispatch beat flat on only {wins}/3 skew "
+            f"scenarios (need >= {WINS_REQUIRED})")
+
+
+if __name__ == "__main__":
+    run()

@@ -32,6 +32,8 @@ SECTIONS = [
      "benchmarks.bench_replay"),
     ("fusion", "Cross-layer fusion: fused vs back-to-back fragment makespan",
      "benchmarks.bench_fusion"),
+    ("topology", "Topology-aware hierarchical EP: two-level vs flat dispatch",
+     "benchmarks.bench_topology"),
     ("ep_modes", "EP mode comparison on the JAX system",
      "benchmarks.bench_ep_modes"),
     ("roofline", "TPU roofline table from the dry-run",

@@ -183,12 +183,77 @@ def _comm_vec_us(plan: RoutingPlan, cfg: ScheduleConfig, direction: str,
     return link, vec
 
 
+def _comm_topo_us(plan: RoutingPlan, cfg: ScheduleConfig,
+                  cost: CostModel) -> np.ndarray:
+    """Per-rank comm time under a Topology: the busiest link class.
+
+    Walks the exact message set the candidate's dispatch mode emits —
+    per-cell puts, plus gather/aggregated-xnode messages from the same
+    :class:`~repro.core.routing.HierDispatch` geometry ``tasks.py`` fills
+    from — and prices each on its link class (per-message hop latency +
+    bytes over the class bandwidth; local stays HBM-bound). Egress and
+    ingress accumulate separately per (rank, class) — mirroring the
+    simulator's clocks — and a rank's bound is its worst single clock:
+    the NIC and the intra-node bus are independent resources.
+    """
+    from repro.parallel.compression import int8_wire_bytes
+
+    topo, hw = cfg.topology, cost.hw
+    hier = cfg.hier
+    row_b = cfg.d_model * cfg.dtype_bytes
+    ep = plan.ep
+    eg: dict[tuple[int, str], float] = {}
+    ing: dict[tuple[int, str], float] = {}
+
+    def put(a: int, b: int, nbytes: float, extra: float = 0.0) -> None:
+        cls = topo.link_class(a, b)
+        if cls == "local":
+            t = nbytes / (hw.hbm_gbps * 1e3)
+        else:
+            t = topo.latency_us(cls) + nbytes / (topo.bw_gbps(cls) * 1e3)
+        t += extra
+        eg[(a, cls)] = eg.get((a, cls), 0.0) + t
+        ing[(b, cls)] = ing.get((b, cls), 0.0) + t
+
+    c = np.asarray(plan.counts, dtype=np.int64)
+    for s in range(ep):
+        for d in range(ep):
+            for e in range(plan.e_loc):
+                cnt = int(c[s, d, e])
+                if cnt == 0:
+                    continue
+                put(d, s, cnt * row_b)          # combine return, always flat
+                if (hier is not None
+                        and not hier.same_node(s, d)
+                        and hier.aggregated(hier.node_of(s), d, e)):
+                    put(s, hier.leader(hier.node_of(s), d, e), cnt * row_b)
+                else:
+                    put(s, d, cnt * row_b)
+    if hier is not None:
+        for leader in range(ep):
+            for (d, e, _srcs, total) in hier.stage_groups(leader):
+                nb = total * row_b
+                wire, qdq = nb, 0.0
+                if cfg.xnode_compress == "int8":
+                    wire = int8_wire_bytes(nb, cfg.dtype_bytes)
+                    qdq = 2 * nb / (hw.l2_read_x_hbm * hw.hbm_gbps * 1e3)
+                put(leader, d, wire, extra=qdq)
+
+    link = np.zeros(ep)
+    for (r, _cls), t in eg.items():
+        link[r] = max(link[r], t)
+    for (r, _cls), t in ing.items():
+        link[r] = max(link[r], t)
+    return link
+
+
 def _crit_tiles(plan: RoutingPlan, cfg: ScheduleConfig,
                 rank: int) -> tuple[int, int, int]:
     """(dominant-expert tile count, other-expert tile count, max tile rows)
     for ``rank`` under the candidate tiling — the exact quantities the
     ``critical_rank_first`` starved-chain gate checks at compile time."""
-    tiles = plan.gmm_tiles(rank, cfg.gmm_m_split, cfg.gmm_split_mode)
+    tiles = plan.gmm_tiles(rank, cfg.gmm_m_split, cfg.gmm_split_mode,
+                           cfg.tile_atom_nodes, cfg.tile_agg_rows)
     if not tiles:
         return 0, 0, 0
     rows_by_e: dict[int, int] = {}
@@ -260,6 +325,11 @@ def _price_context(cfg: ScheduleConfig, direction: str,
     cube = cost.rank_cube_us(view)
     ratio, crit = cost.critical_rank(view)
     link, vec = _comm_vec_us(plan, cfg, direction, cost)
+    if cfg.topology is not None:
+        # Per-link-class pricing replaces the flat uniform-link estimate:
+        # the candidate's real message set (incl. two-level dispatch
+        # aggregation and compression) on heterogeneous links.
+        link = _comm_topo_us(plan, cfg, cost)
     per_rank = [max(cube[r] / hw.num_aic, vec[r] / hw.num_aiv,
                     float(link[r]))
                 for r in range(plan.ep)]
@@ -350,15 +420,43 @@ def _candidate_cfgs(cfg: ScheduleConfig, starved: bool,
     selection prices |SCHED_PIPELINES| candidates, not a cross product.
     """
     cfgs = [cfg]
-    if not allow_retile or not starved:
-        return cfgs
-    m2 = min(2 * max(1, cfg.gmm_m_split), 4 * 64)
-    if m2 > cfg.gmm_m_split:
-        # source_aligned boundaries are legal for arbitrary plans; a starved
-        # hotspot is by construction imbalanced, so never force "even".
-        cfgs.append(dataclasses.replace(cfg, gmm_m_split=m2,
-                                        gmm_split_mode="source_aligned"))
+    if allow_retile and starved:
+        m2 = min(2 * max(1, cfg.gmm_m_split), 4 * 64)
+        if m2 > cfg.gmm_m_split:
+            # source_aligned boundaries are legal for arbitrary plans; a
+            # starved hotspot is by construction imbalanced, so never force
+            # "even".
+            cfgs.append(dataclasses.replace(cfg, gmm_m_split=m2,
+                                            gmm_split_mode="source_aligned"))
     return cfgs
+
+
+def _dispatch_variants(cfgs: list[ScheduleConfig],
+                       allow_retile: bool) -> list[ScheduleConfig]:
+    """Expand the grid with two-level-dispatch variants when a Topology is
+    present.
+
+    Hier changes the task *structure* (staging tensors, xnode ops, node-atom
+    tiling), so it only enumerates under ``allow_retile`` — the SSC path,
+    which rebuilds the ODG from the returned config. Variants are skipped
+    when the plan's cross-node groups all stay on the direct path (the
+    aggregation threshold says flat is optimal — the candidates would price
+    identically and only add tie noise). The compressed variant rides the
+    same geometry with int8 inter-node wire bytes.
+    """
+    out = list(cfgs)
+    if not allow_retile:
+        return out
+    for base in cfgs:
+        if base.topology is None or base.dispatch_mode != "flat":
+            continue
+        h = dataclasses.replace(base, dispatch_mode="hier",
+                                gmm_split_mode="source_aligned")
+        if not any(h.hier.n_stage_groups(r) for r in range(h.ep)):
+            continue
+        out.append(h)
+        out.append(dataclasses.replace(h, xnode_compress="int8"))
+    return out
 
 
 @functools.lru_cache(maxsize=512)
@@ -375,17 +473,24 @@ def _select(cfg: ScheduleConfig, direction: str, allow_retile: bool,
     starved = fires and base_ctx.n_other < hw.num_aic and feats.hotspot
 
     scores: list[CandidateScore] = []
-    for cand_cfg in _candidate_cfgs(cfg, starved, allow_retile):
-        retiled = cand_cfg.gmm_m_split != cfg.gmm_m_split
-        ctx = (_price_context(cand_cfg, direction, cost) if retiled
-               else base_ctx)
+    grid = _dispatch_variants(_candidate_cfgs(cfg, starved, allow_retile),
+                              allow_retile)
+    for cand_cfg in grid:
+        ctx = (_price_context(cand_cfg, direction, cost)
+               if cand_cfg != cfg else base_ctx)
+        hier_cand = cand_cfg.dispatch_mode == "hier"
         for tag, spec in SCHED_PIPELINES.items():
             names = tuple(spec)
             if not fires and "critical_rank_first" in names:
                 # The pass is a gated no-op below the straggler threshold;
                 # pricing it would only duplicate its crit-less twin.
                 continue
-            label = f"{tag}:m{cand_cfg.gmm_m_split}" if retiled else tag
+            label = tag
+            if cand_cfg.gmm_m_split != cfg.gmm_m_split:
+                label += f":m{cand_cfg.gmm_m_split}"
+            if hier_cand:
+                names = names + ("hier_dispatch",)
+                label += (":hier+c" if cand_cfg.xnode_compress else ":hier")
             scores.append(CandidateScore(
                 tag=label, pipeline=Pipeline.of(*names), cfg=cand_cfg,
                 predicted_us=predict_makespan_us(cand_cfg, direction, names,

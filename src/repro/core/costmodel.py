@@ -19,8 +19,9 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
+from typing import Optional
 
-from .hardware import AscendA3
+from .hardware import AscendA3, Topology
 from .odg import CTQ
 
 
@@ -33,6 +34,20 @@ class CostModel:
     # ignored and every input streams from HBM — the deterministic estimate
     # compile-time passes use.
     l2: bool = True
+    # Optional cluster topology: remote transfers are then priced per link
+    # class (intra-node vs inter-node bandwidth and latency) instead of the
+    # flat ``hw.link_gbps`` / ``hw.hop_latency_us``.
+    topology: Optional[Topology] = None
+
+    def link_class_of(self, td) -> str:
+        """Link class of a put task: local / intra / inter, or the flat
+        ``"link"`` when no topology is attached (incl. multi-dst fallback
+        tasks, whose destinations are unknown)."""
+        if td.dst_rank == td.src_rank:
+            return "local"
+        if self.topology is None or td.dst_rank < 0:
+            return "link"
+        return self.topology.link_class(td.src_rank, td.dst_rank)
 
     def task_us(self, td, l2_hit_frac: float = 0.0) -> float:
         """Execution time of one TD in microseconds.
@@ -44,10 +59,23 @@ class CostModel:
         hw = self.hw
         frac = l2_hit_frac if self.l2 else 0.0
         if td.task_type == "put_mem_signal":
-            if td.dst_rank == td.src_rank:
+            t = 0.0
+            if td.meta.get("compress"):
+                # Quantize at the sender + dequantize at the receiver:
+                # two L2-resident streaming passes over the full-precision
+                # payload. ``comm_bytes`` already reflects the wire size.
+                t += ((td.read_bytes + td.write_bytes)
+                      / (hw.l2_read_x_hbm * hw.hbm_gbps * 1e3))
+            cls = self.link_class_of(td)
+            if cls == "local":
                 # Rank-local "transfer" is an HBM copy, not link traffic.
-                return td.comm_bytes / (hw.hbm_gbps * 1e3)
-            return td.comm_bytes / (hw.link_gbps * 1e3)  # bytes/(GB/s) → us
+                return t + td.comm_bytes / (hw.hbm_gbps * 1e3)
+            if cls == "link":
+                return (t + hw.hop_latency_us
+                        + td.comm_bytes / (hw.link_gbps * 1e3))
+            topo = self.topology
+            return (t + topo.latency_us(cls)
+                    + td.comm_bytes / (topo.bw_gbps(cls) * 1e3))
         if td.queue_type == CTQ:
             # Per-tile GMM efficiency depends on operand L2 residency — the
             # mechanism cache-guided interleaving exploits (§4.5).

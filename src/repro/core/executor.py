@@ -110,6 +110,12 @@ class ExecutorState:
 def _h_put_mem_signal(td: TaskDescriptor, st: ExecutorState) -> None:
     src = td.inputs[0]
     data = st.get(src.tensor, src.rank)[src.lo:src.hi]
+    if td.meta.get("compress") == "int8":
+        # Compressed inter-node hop: the destination receives the
+        # quantize→dequantize round-trip of the payload, exactly what the
+        # int8 wire format delivers (see parallel/compression.py).
+        from repro.parallel.compression import int8_roundtrip_np
+        data = int8_roundtrip_np(data)
     off = 0
     for out in td.outputs:
         buf = st.ensure(out.tensor, out.rank, out.hi, data.shape[1])

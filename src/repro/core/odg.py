@@ -26,7 +26,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional, Sequence
 
-from .routing import RoutingPlan, balanced_plan
+from .hardware import Topology
+from .routing import HierDispatch, RoutingPlan, balanced_plan
 
 # Resource classes (paper: AIC = cube/matrix, AIV = vector/comm/data-movement).
 CUBE = "cube"
@@ -145,6 +146,20 @@ class ScheduleConfig:
     # Schedule.opts / the SSC blob for provenance. Any BucketSpec /
     # int / str / spec form normalizes to the key tuple at construction.
     bucket: Optional[tuple] = None
+    # Cluster link topology (core/hardware.Topology). None = every link
+    # equal (the flat-interconnect assumption of the seed). Setting it
+    # makes link classes visible to the cost model, autoselect, and the
+    # node-aware passes even when dispatch stays flat.
+    topology: Optional[Topology] = None
+    # "flat" — one put per nonzero (dst, expert) cell (seed behaviour);
+    # "hier" — two-level dispatch: same-node cells stay flat, cross-node
+    # cells are gathered at a node-leader rank and take the inter-node
+    # hop as one aggregated message per (leader, dst, expert) group.
+    # Requires ``topology`` and ``gmm_split_mode="source_aligned"``.
+    dispatch_mode: str = "flat"
+    # Compress the aggregated inter-node hop only: None or "int8"
+    # (symmetric per-message quantization; see parallel/compression.py).
+    xnode_compress: Optional[str] = None
 
     def __post_init__(self):
         if self.gmm_split_mode not in ("even", "source_aligned"):
@@ -160,6 +175,58 @@ class ScheduleConfig:
             raise ValueError(
                 f"plan shape ({self.plan.ep}, {self.plan.e_loc}) does not "
                 f"match config (ep={self.ep}, e_loc={self.e_loc})")
+        if self.dispatch_mode not in ("flat", "hier"):
+            raise ValueError(
+                f"dispatch_mode must be 'flat' or 'hier', "
+                f"got {self.dispatch_mode!r}")
+        if self.xnode_compress not in (None, "int8"):
+            raise ValueError(
+                f"xnode_compress must be None or 'int8', "
+                f"got {self.xnode_compress!r}")
+        if self.topology is not None and self.ep % self.topology.ranks_per_node:
+            raise ValueError(
+                f"ep={self.ep} is not a multiple of "
+                f"topology.ranks_per_node={self.topology.ranks_per_node}")
+        if self.dispatch_mode == "hier":
+            if self.topology is None:
+                raise ValueError("dispatch_mode='hier' requires a topology")
+            if self.gmm_split_mode != "source_aligned":
+                raise ValueError(
+                    "dispatch_mode='hier' requires "
+                    "gmm_split_mode='source_aligned' (tile boundaries must "
+                    "respect aggregated inter-node message atoms)")
+        if self.xnode_compress is not None and self.dispatch_mode != "hier":
+            raise ValueError(
+                "xnode_compress only applies to dispatch_mode='hier'")
+
+    @property
+    def hier(self) -> Optional[HierDispatch]:
+        """Two-level dispatch geometry, or None under flat dispatch."""
+        if self.dispatch_mode != "hier":
+            return None
+        return HierDispatch(self.routing, self.topology.ranks_per_node,
+                            agg_rows=self.tile_agg_rows)
+
+    @property
+    def tile_atom_nodes(self) -> Optional[int]:
+        """Node size for GMM/vector tile atoms (hier mode only): tiles may
+        not split the landing zone of an aggregated inter-node message."""
+        if self.dispatch_mode != "hier":
+            return None
+        return self.topology.ranks_per_node
+
+    @property
+    def tile_agg_rows(self) -> Optional[float]:
+        """Aggregation threshold in rows (hier mode only): the row count
+        whose inter-node transfer time equals one inter-node hop latency.
+        A remote-node group aggregates iff its total rows stay within
+        ``(n_cells - 1)`` times this — the hop latency saved covers the
+        per-cell pipelining given up (see ``routing.aggregate_group``)."""
+        if self.dispatch_mode != "hier":
+            return None
+        t = self.topology
+        return (t.inter_hop_us * t.inter_gbps * 1e3
+                / (self.d_model * self.dtype_bytes))
 
     @property
     def routing(self) -> RoutingPlan:
@@ -237,16 +304,24 @@ def _dispatch_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
     return c.routing.n_send_cells(op.rank)
 
 
+def _dispatch_x_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
+    # One aggregated inter-node put per (leader, dst rank, expert) group
+    # homed at this leader rank (hier dispatch only).
+    return c.hier.n_stage_groups(op.rank)
+
+
 def _gmm_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
     # Task-level parallelism only along expert blocks (× optional row split);
     # the K reduction dimension stays intact (§4.2). Empty experts produce
     # no tiles; ragged blocks produce a ragged last chunk.
-    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split, c.gmm_split_mode)
+    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split, c.gmm_split_mode,
+                                 c.tile_atom_nodes, c.tile_agg_rows)
 
 
 def _vector_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
     # AIV-side elementwise ops align with GMM row partitions.
-    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split, c.gmm_split_mode)
+    return c.routing.n_gmm_tiles(op.rank, c.gmm_m_split, c.gmm_split_mode,
+                                 c.tile_atom_nodes, c.tile_agg_rows)
 
 
 def _combine_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
@@ -257,6 +332,13 @@ def _combine_tasks(c: ScheduleConfig, op: "OperatorNode") -> int:
 
 DISPATCH_SPEC = SplitSpec(split_inputs=None, split_output_dims=(0,),
                           task_num_fn=_dispatch_tasks, always_label=True)
+# Hier dispatch declares the staging buffer as a second output.
+HIER_DISPATCH_SPEC = SplitSpec(split_inputs=None, split_output_dims=(0, 0),
+                               task_num_fn=_dispatch_tasks, always_label=True)
+# The aggregated inter-node hop is its own partitioning origin: one task
+# per (leader, dst, expert) staging group.
+DISPATCH_X_SPEC = SplitSpec(split_inputs=None, split_output_dims=(0,),
+                            task_num_fn=_dispatch_x_tasks, always_label=True)
 GMM_SPEC = SplitSpec(split_inputs=((0, 0),), split_output_dims=(0,),
                      task_num_fn=_gmm_tasks)
 SWIGLU_SPEC = SplitSpec(split_inputs=((0, 0),), split_output_dims=(0,),
@@ -281,6 +363,7 @@ def build_moe_ffn_forward(cfg: ScheduleConfig) -> ODG:
     d, f = cfg.d_model, cfg.d_ff
     plan = cfg.routing
 
+    hier = cfg.hier
     for r in range(cfg.ep):
         # Source-side routed tokens, grouped by (dst rank, expert).
         x_src = g.tensor(f"x_src@{r}", plan.send_rows(r), d * db,
@@ -288,9 +371,26 @@ def build_moe_ffn_forward(cfg: ScheduleConfig) -> ODG:
         # Receive buffer, grouped by (expert, src rank) — expert-major so each
         # expert's rows are contiguous for the GMM.
         x_recv = g.tensor(f"x_recv@{r}", plan.recv_rows(r), d * db)
+        outputs, spec = [x_recv], DISPATCH_SPEC
+        if hier is not None:
+            # Node-leader staging buffer for this rank's homed groups.
+            outputs.append(g.tensor(f"x_recv_stg@{r}", hier.stage_rows(r),
+                                    d * db))
+            spec = HIER_DISPATCH_SPEC
         g.add_op(OperatorNode(
             name=f"Dispatch@{r}", op_type="dispatch", resource=VECTOR, rank=r,
-            inputs=[x_src], outputs=[x_recv], split_spec=DISPATCH_SPEC))
+            inputs=[x_src], outputs=outputs, split_spec=spec))
+
+    if hier is not None:
+        for r in range(cfg.ep):
+            if hier.n_stage_groups(r) == 0:
+                continue
+            g.add_op(OperatorNode(
+                name=f"DispatchX@{r}", op_type="dispatch_xnode",
+                resource=VECTOR, rank=r,
+                inputs=[g.tensors[f"x_recv_stg@{r}"]],
+                outputs=[g.tensors[f"x_recv@{r}"]],
+                split_spec=DISPATCH_X_SPEC))
 
     for r in range(cfg.ep):
         x_recv = g.tensors[f"x_recv@{r}"]
@@ -341,14 +441,31 @@ def build_moe_ffn_backward(cfg: ScheduleConfig) -> ODG:
     d, f = cfg.d_model, cfg.d_ff
     plan = cfg.routing
 
+    hier = cfg.hier
     for r in range(cfg.ep):
         dy_src = g.tensor(f"dy_src@{r}", plan.send_rows(r),
                           d * db, external=True)
         dy_recv = g.tensor(f"dy_recv@{r}", plan.recv_rows(r), d * db)
+        outputs, spec = [dy_recv], DISPATCH_SPEC
+        if hier is not None:
+            outputs.append(g.tensor(f"dy_recv_stg@{r}", hier.stage_rows(r),
+                                    d * db))
+            spec = HIER_DISPATCH_SPEC
         g.add_op(OperatorNode(
             name=f"DispatchB@{r}", op_type="dispatch", resource=VECTOR,
-            rank=r, inputs=[dy_src], outputs=[dy_recv],
-            split_spec=DISPATCH_SPEC))
+            rank=r, inputs=[dy_src], outputs=outputs,
+            split_spec=spec))
+
+    if hier is not None:
+        for r in range(cfg.ep):
+            if hier.n_stage_groups(r) == 0:
+                continue
+            g.add_op(OperatorNode(
+                name=f"DispatchBX@{r}", op_type="dispatch_xnode",
+                resource=VECTOR, rank=r,
+                inputs=[g.tensors[f"dy_recv_stg@{r}"]],
+                outputs=[g.tensors[f"dy_recv@{r}"]],
+                split_spec=DISPATCH_X_SPEC))
 
     for r in range(cfg.ep):
         dy_recv = g.tensors[f"dy_recv@{r}"]

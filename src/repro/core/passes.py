@@ -249,6 +249,15 @@ def _pass_critical_rank_first(sched, cfg: ScheduleConfig, *,
     apply_critical_rank_first(sched, cfg, threshold=threshold, lag=lag)
 
 
+@register_pass("hier_dispatch")
+def _pass_hier_dispatch(sched, cfg: ScheduleConfig) -> None:
+    """Node-ring ordering for two-level dispatch stage puts. Stable no-op
+    on flat schedules (no ``stage``-tagged tasks) and without a topology,
+    so it composes freely into any pipeline."""
+    from .reorder import apply_hier_dispatch
+    apply_hier_dispatch(sched, cfg)
+
+
 @register_pass("fuse_boundary")
 def _pass_fuse_boundary(sched, cfg: ScheduleConfig) -> None:
     """Fragment-spanning pass for fused schedules (core/fusion.py): hoist

@@ -84,7 +84,7 @@ def ratr_order(rank: int, ep: int) -> list[int]:
 
 
 def apply_ratr(sched, cfg: ScheduleConfig) -> None:
-    """Ring-rotate each rank's comm blocks; fragment-aware.
+    """Ring-rotate each rank's comm blocks; fragment- and node-aware.
 
     On multi-fragment schedules the ring start additionally rotates by the
     task's fragment index, so consecutive layers at the same source rank
@@ -92,8 +92,20 @@ def apply_ratr(sched, cfg: ScheduleConfig) -> None:
     schedule re-creates the transient hotspot RATR removes, once per layer
     boundary. Single-fragment schedules (fragment 0 everywhere) reorder
     byte-identically to the original RATR.
+
+    With a :class:`~repro.core.hardware.Topology` the ring rotates over
+    *nodes* first: rank r walks remote nodes starting at the next node on
+    the node ring, visiting same-node destinations last. Cross-node puts
+    are the scarce resource (the NIC), so every source starts pushing onto
+    a *different* node's ingress while the cheap intra-node copies fill
+    the tail; within one destination node, the rank-level ring still
+    staggers ingress ports. Without a topology the key degenerates to the
+    original rank ring (n_nodes=1 ⇒ node term constant).
     """
     ep = cfg.ep
+    topo = getattr(cfg, "topology", None)
+    nodes = topo.n_nodes(ep) if topo is not None else 1
+    node_of = (topo.node_of if topo is not None else (lambda r: 0))
     for (rank, qtype), q in sched.queues.items():
         if qtype != VTQ:
             continue
@@ -101,8 +113,41 @@ def apply_ratr(sched, cfg: ScheduleConfig) -> None:
         def key(tid, rank=rank):
             td = sched.tasks[tid]
             frag = td.meta.get("fragment", 0)
-            return ((td.dst_rank - rank - 1 - frag) % ep,
+            return ((node_of(td.dst_rank) - node_of(rank) - 1 - frag)
+                    % nodes if nodes > 1 else 0,
+                    (td.dst_rank - rank - 1 - frag) % ep,
                     td.meta.get("expert", 0))
+
+        sched.queues[(rank, qtype)] = reorder_comm_blocks(sched, q, key)
+
+
+def apply_hier_dispatch(sched, cfg: ScheduleConfig) -> None:
+    """Order two-level dispatch stage puts by node-ring distance.
+
+    Within each comm block, hierarchical stage tasks (the intra-node
+    ``gather`` puts and the aggregated ``xnode`` puts emitted by
+    ``dispatch_mode="hier"``) are hoisted ahead of ordinary puts and
+    walked over destination *nodes* ring-wise from the sender's own node —
+    the node-level analogue of RATR: gathers that feed the most distant
+    leader's aggregation issue first, so the slow inter-node messages can
+    start as early as their staging rows land. Tasks without a ``stage``
+    tag sort under one constant key, so the stable sort leaves flat
+    schedules byte-identical (the pass is a registered no-op there).
+    """
+    topo = getattr(cfg, "topology", None)
+    if topo is None:
+        return
+    nodes = topo.n_nodes(cfg.ep)
+    for (rank, qtype), q in sched.queues.items():
+        if qtype != VTQ:
+            continue
+        my_node = topo.node_of(rank)
+
+        def key(tid, my_node=my_node):
+            td = sched.tasks[tid]
+            if td.meta.get("stage") not in ("gather", "xnode"):
+                return (1, 0)
+            return (0, (td.meta.get("dst_node", 0) - my_node - 1) % nodes)
 
         sched.queues[(rank, qtype)] = reorder_comm_blocks(sched, q, key)
 

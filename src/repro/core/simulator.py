@@ -56,6 +56,10 @@ class SimResult:
     # of that fragment's tasks. Overlap shows up as spans summing to more
     # than the makespan.
     fragment_makespan_us: dict = dataclasses.field(default_factory=dict)
+    # Per-link-class transfer busy time: {"local"/"link"} flat, or
+    # {"local"/"intra"/"inter"} when the cost model carries a Topology —
+    # where the comm time actually lives in a hierarchical cluster.
+    link_us: dict = dataclasses.field(default_factory=dict)
 
     @property
     def l2_hit_rate(self) -> float:
@@ -167,8 +171,12 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
     idle = {k: pools[k[1]] for k in s.queues}
     counters: dict[int, int] = defaultdict(int)
     waiters: dict[int, list[int]] = defaultdict(list)   # eid -> [tid]
-    egress_free = {r: 0.0 for r in ranks}
-    ingress_free = {r: 0.0 for r in ranks}
+    # Link clocks are per (rank, link class): with a Topology the intra-node
+    # bus and the inter-node NIC are independent resources, so intra traffic
+    # never queues behind an inter-node transfer (and vice versa).
+    egress_free: dict = defaultdict(float)
+    ingress_free: dict = defaultdict(float)
+    link_busy: dict = defaultdict(float)
     busy: dict = defaultdict(float)
     timeline: list = []
     heap: list = []       # (time, seq, kind, payload)
@@ -240,12 +248,16 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
             # avoids artificial convoy holes from joint interval booking
             # while still capturing per-link serialization (the RATR
             # hotspot effect shows up as an inflated ingress clock).
-            e0 = max(egress_free[td.src_rank], t) + dur
-            i0 = max(ingress_free[td.dst_rank], t) + dur
-            egress_free[td.src_rank] = e0
-            ingress_free[td.dst_rank] = i0
+            cls = cost.link_class_of(td)
+            e0 = max(egress_free[(td.src_rank, cls)], t) + dur
+            i0 = max(ingress_free[(td.dst_rank, cls)], t) + dur
+            egress_free[(td.src_rank, cls)] = e0
+            ingress_free[(td.dst_rank, cls)] = i0
             begin = max(e0, i0) - dur
             comm_busy_intervals.append((begin, begin + dur))
+            link_busy[cls] += dur
+        elif td.task_type == "put_mem_signal":
+            link_busy[cost.link_class_of(td)] += dur
         end = begin + dur
         key = (td.rank, td.queue_type)
         busy[key] += dur
@@ -315,7 +327,8 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
                      critical_rank=crit, phase_us=dict(phase_busy),
                      dispatch_to_combine_us=d2c_us,
                      fragment_makespan_us={f: hi - lo for f, (lo, hi)
-                                           in sorted(frag_span.items())})
+                                           in sorted(frag_span.items())},
+                     link_us=dict(link_busy))
 
 
 def _straggler(busy: dict, ranks) -> tuple[float, int]:

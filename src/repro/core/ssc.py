@@ -22,6 +22,8 @@ Cache keying and bucketing semantics
      gmm_m_split, gmm_split_mode,
      cfg.routing.counts,          # the full per-(src, dst, expert) matrix
      cfg.bucket,                  # BucketSpec.key() provenance (or None)
+     cfg.topology.key(),          # cluster link shape (or None = flat links)
+     cfg.dispatch_mode, cfg.xnode_compress,
      direction, pipeline.key())
 
 Three properties follow:
@@ -228,9 +230,15 @@ class SSCCache:
         # ``pipeline="auto"`` is keyed by its *resolved* (config, spec) —
         # cached schedules stay byte-addressable by what actually compiled.
         cfg, pipe = SSCCache._resolve(cfg, direction, pipeline, opts)
+        # Topology key + dispatch mode + compression: two-level dispatch
+        # emits a different task structure (and the aggregation threshold
+        # depends on the link parameters), so schedules compiled under
+        # different cluster shapes must never alias.
+        topo = cfg.topology.key() if cfg.topology is not None else None
         return (cfg.ep, cfg.e_loc, cfg.d_model, cfg.d_ff, cfg.dtype_bytes,
                 cfg.gmm_m_split, cfg.gmm_split_mode, cfg.routing.counts,
-                cfg.bucket, direction, pipe.key())
+                cfg.bucket, topo, cfg.dispatch_mode, cfg.xnode_compress,
+                direction, pipe.key())
 
     def get_or_compile(self, cfg: ScheduleConfig, direction: str,
                        pipeline=None, **opts) -> Schedule:

@@ -136,11 +136,30 @@ def _fill_dispatch(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor
     cells = plan.send_cells(r)               # (dst, e, count), dst-major
     if not cells:
         return []
+    hier = cfg.hier
+    base_stg = base_dst + "_stg"
     # Dispatch is a partitioning origin (split_inputs=None), so it never
     # falls back to one unsplit task: always one exact TD per nonzero cell.
     tds = []
     for (d, e, c) in cells:
         s_lo = plan.send_offset(r, d, e)
+        if (hier is not None and not hier.same_node(r, d)
+                and hier.aggregated(hier.node_of(r), d, e)):
+            # Two-level dispatch, stage 1: gather this cell into the
+            # (dst, expert) group's staging slot on the node leader —
+            # an intra-node hop.
+            leader = hier.leader(hier.node_of(r), d, e)
+            g_lo = hier.cell_offset(leader, d, e, r)
+            tds.append(TaskDescriptor(
+                task_type="put_mem_signal", queue_type=VTQ,
+                inputs=[Range(base_src, r, s_lo, s_lo + c)],
+                outputs=[Range(base_stg, leader, g_lo, g_lo + c)],
+                task_split_value=c,
+                comm_bytes=c * row_b, src_rank=r, dst_rank=leader,
+                read_bytes=c * row_b, write_bytes=c * row_b,
+                meta={"expert": e, "dst": d, "comm_kind": "dispatch",
+                      "stage": "gather", "dst_node": hier.node_of(d)}))
+            continue
         d_lo = plan.recv_offset(d, e, r)
         tds.append(TaskDescriptor(
             task_type="put_mem_signal", queue_type=VTQ,
@@ -150,6 +169,49 @@ def _fill_dispatch(cfg: ScheduleConfig, op: OperatorNode) -> list[TaskDescriptor
             comm_bytes=c * row_b, src_rank=r, dst_rank=d,
             read_bytes=c * row_b, write_bytes=c * row_b,
             meta={"expert": e, "dst": d, "comm_kind": "dispatch"}))
+    return tds
+
+
+@fill_config("dispatch_xnode")
+def _fill_dispatch_xnode(cfg: ScheduleConfig,
+                         op: OperatorNode) -> list[TaskDescriptor]:
+    """Two-level dispatch, stage 2: one aggregated inter-node put per
+    (dst rank, expert) group staged at this node-leader rank.
+
+    The staging buffer is (d, e)-major with sources ascending inside a
+    group, and the destination recv buffer is (expert, src)-major — so one
+    contiguous staging range lands in one contiguous recv range, row-for-row
+    identical to what flat per-cell dispatch would have delivered.
+    """
+    from repro.parallel.compression import int8_wire_bytes
+
+    hier = cfg.hier
+    leader = op.rank
+    stg_t, dst_t = op.inputs[0], op.outputs[0]
+    row_b = stg_t.row_bytes
+    base_stg = stg_t.name.split("@")[0]
+    base_dst = dst_t.name.split("@")[0]
+    src_node = hier.node_of(leader)
+    tds = []
+    for (d, e, _srcs, total) in hier.stage_groups(leader):
+        g_lo = hier.group_offset(leader, d, e)
+        d_lo, rows = hier.recv_node_span(d, e, src_node)
+        assert rows == total
+        nbytes = total * row_b
+        comm = nbytes
+        meta = {"expert": e, "dst": d, "comm_kind": "dispatch",
+                "stage": "xnode", "dst_node": hier.node_of(d)}
+        if cfg.xnode_compress == "int8":
+            comm = int8_wire_bytes(nbytes, cfg.dtype_bytes)
+            meta["compress"] = "int8"
+        tds.append(TaskDescriptor(
+            task_type="put_mem_signal", queue_type=VTQ,
+            inputs=[Range(base_stg, leader, g_lo, g_lo + total)],
+            outputs=[Range(base_dst, d, d_lo, d_lo + total)],
+            task_split_value=total,
+            comm_bytes=comm, src_rank=leader, dst_rank=d,
+            read_bytes=nbytes, write_bytes=nbytes,
+            meta=meta))
     return tds
 
 
@@ -229,7 +291,9 @@ def _gmm_tiles(cfg: ScheduleConfig, op: OperatorNode,
     # (even or source-aligned boundaries per cfg.gmm_split_mode), last chunk
     # ragged — every routed row is covered exactly once.
     for (e, m, lo, hi) in plan.gmm_tiles(r, cfg.gmm_m_split,
-                                         cfg.gmm_split_mode):
+                                         cfg.gmm_split_mode,
+                                         cfg.tile_atom_nodes,
+                                         cfg.tile_agg_rows):
         chunk = hi - lo
         k = in_row_b // _db(cfg)
         n = out_row_b // (_db(cfg) if task_type != "GMMWGrad" else 4)
@@ -300,7 +364,9 @@ def _rowwise_tiles(cfg: ScheduleConfig, op: OperatorNode,
         ranges = [(lo, hi, {"expert": e, "m": m})
                   for (e, m, lo, hi)
                   in cfg.routing.gmm_tiles(r, cfg.gmm_m_split,
-                                           cfg.gmm_split_mode)]
+                                           cfg.gmm_split_mode,
+                                           cfg.tile_atom_nodes,
+                                           cfg.tile_agg_rows)]
     else:
         # Generic even row split with a ragged last tile (no row dropped).
         chunk = -(-in_t.rows // op.task_num)

@@ -1,4 +1,4 @@
-"""Gradient compression for the bandwidth-poor cross-pod axis.
+"""Gradient/activation compression for the bandwidth-poor cross-node axis.
 
 ``make_pod_compressed_psum``-style transforms plug into the optimizer's
 ``grad_transform`` hook. Two schemes:
@@ -11,21 +11,56 @@
 
 On the intra-pod axes gradients stay full precision — the hierarchy follows
 the bandwidth hierarchy, as the paper's RATR does for EP links.
+
+The same int8 transform compresses the *aggregated inter-node hop* of
+two-level hierarchical dispatch (``ScheduleConfig(xnode_compress="int8")``):
+``int8_wire_bytes`` is what the cost model prices on the slow link and
+``int8_roundtrip_np`` is the numpy model of the payload the executor
+delivers (quantized at the leader, dequantized at the destination). These
+helpers are numpy-only — the jax dependency stays inside the optimizer-path
+functions so the jax-free compile stack (``core/``) can import this module.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import numpy as np
+
+# Wire overhead of one compressed message: the fp32 scale, padded to a row
+# multiple on real transports — 8 bytes models scale + header.
+INT8_SCALE_BYTES = 8
+
+
+def int8_wire_bytes(nbytes: int, dtype_bytes: int = 2) -> int:
+    """Bytes on the wire for an int8-compressed message of ``nbytes``
+    full-precision payload (one int8 per element + per-message scale)."""
+    return nbytes // max(1, dtype_bytes) + INT8_SCALE_BYTES
+
+
+def int8_roundtrip_np(x: np.ndarray) -> np.ndarray:
+    """Symmetric per-message int8 quantize→dequantize (numpy).
+
+    Models what the inter-node hop delivers under ``xnode_compress="int8"``.
+    Mirrors ``int8_ef_compress``'s scalar math: per-message max-abs scale,
+    round-to-nearest, clip to ±127.
+    """
+    x32 = x.astype(np.float32)
+    amax = float(np.max(np.abs(x32))) if x32.size else 0.0
+    scale = max(amax, 1e-12) / 127.0
+    q = np.clip(np.round(x32 / scale), -127, 127).astype(np.int8)
+    return (q.astype(np.float32) * scale).astype(x.dtype)
 
 
 def bf16_compress(grads):
     """Round-trip through bf16 (halves cross-pod reduce bytes)."""
+    import jax
+    import jax.numpy as jnp
     return jax.tree.map(
         lambda g: g.astype(jnp.bfloat16).astype(g.dtype), grads)
 
 
 def int8_ef_init(params):
+    import jax
+    import jax.numpy as jnp
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
@@ -35,6 +70,9 @@ def int8_ef_compress(grads, error_state):
     Returns (decompressed grads, new error state). The quantize→dequantize
     round-trip models what crosses the pod link; the residual is carried.
     """
+    import jax
+    import jax.numpy as jnp
+
     def q_deq(g, e):
         g32 = g.astype(jnp.float32) + e
         scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0

@@ -77,7 +77,8 @@ def plan_from_dispatch(top_i, mc: MoEConfig, ep: int, C: int):
     return RoutingPlan.from_counts(counts)
 
 
-def ring_chunk_caps(plan, ep: int) -> tuple:
+def ring_chunk_caps(plan, ep: int, topology=None, bucket=None,
+                    inter_bucket=None) -> tuple:
     """Per-ring-step row caps from a :class:`RoutingPlan`.
 
     ``caps[k]`` is the largest per-(dst, expert) row count any source rank
@@ -88,6 +89,19 @@ def ring_chunk_caps(plan, ep: int) -> tuple:
     entirely (no ppermute pair, no FFN). Caps are an upper bound per SPMD
     step: all ranks must move the same shape, so the straggler source sets
     the cap.
+
+    With a :class:`repro.core.hardware.Topology`, each step's cap can be
+    quantized per *link class*: ring step ``k`` is an **inter-node** step
+    when any source's hop at distance ``k`` crosses a node boundary (one
+    straggler crossing makes the whole SPMD step pay NIC rates). Intra-node
+    steps quantize their caps with ``bucket``, inter-node steps with the
+    (typically coarser) ``inter_bucket`` — fewer distinct cap rungs on the
+    slow axis means fewer retraces of exactly the steps where a retrace
+    stalls the NIC pipeline longest. Both accept anything
+    ``BucketSpec.from_any`` does; ``None`` leaves that class's caps exact.
+    Quantization only rounds caps *up* (rungs are upper bounds), so a
+    bucketed cap never drops rows a plan-sized chunk would have carried,
+    and zero caps stay zero — step skipping survives bucketing.
     """
     if plan.ep != ep:
         raise ValueError(f"plan ep={plan.ep} != mesh ep={ep}")
@@ -96,7 +110,26 @@ def ring_chunk_caps(plan, ep: int) -> tuple:
     for k in range(ep):
         dst = (np.arange(ep) + k) % ep
         caps.append(int(c[np.arange(ep), dst].max()))
-    return tuple(caps)
+    if bucket is None and inter_bucket is None:
+        return tuple(caps)
+    if inter_bucket is not None and topology is None:
+        raise ValueError(
+            "inter_bucket needs a topology to tell inter-node ring steps "
+            "from intra-node ones")
+    from repro.core.buckets import BucketSpec
+
+    def quantize(cap: int, b) -> int:
+        if b is None or cap == 0:
+            return cap
+        return int(BucketSpec.from_any(b).quantize(np.array([cap]))[0])
+
+    out = []
+    for k, cap in enumerate(caps):
+        inter = topology is not None and any(
+            not topology.same_node(s, (s + k) % ep) for s in range(ep))
+        b = inter_bucket if (inter and inter_bucket is not None) else bucket
+        out.append(quantize(cap, b))
+    return tuple(out)
 
 
 def _expert_ffn_local(w_in, w_down, x, act, use_pallas):
@@ -147,7 +180,7 @@ def _combine(back, top_p, top_i, slot, T, d, ep, e_loc, C, dtype):
 
 
 def make_moe_ep(mesh, epc: EPConfig, act: str = "swiglu", plan=None,
-                bucket=None):
+                bucket=None, topology=None, inter_bucket=None):
     """Returns moe_impl(params, x, mc) running EP over the model axis.
 
     ``plan``: an optional host-known :class:`RoutingPlan` (e.g. from
@@ -169,18 +202,33 @@ def make_moe_ep(mesh, epc: EPConfig, act: str = "swiglu", plan=None,
     e.g. a stale plan reused across batches — overflow rows degrade to
     capacity-style drops (their result rows stay zero); they are never
     mis-gathered.
+
+    ``topology`` (a :class:`repro.core.hardware.Topology`) switches cap
+    quantization to per link class: ring steps whose hop crosses a node
+    boundary for any source quantize with ``inter_bucket`` instead of
+    ``bucket`` (see :func:`ring_chunk_caps`) — a coarser inter-node ladder
+    bounds retraces of the NIC-bound steps separately from the cheap
+    intra-node ones.
     """
     ep = mesh.shape[epc.axis]
     dp = tuple(a for a in mesh.axis_names if a != epc.axis)
-    if bucket is not None:
-        if plan is None:
-            raise ValueError(
-                "make_moe_ep(bucket=...) quantizes a routing plan's ring "
-                "caps — pass plan= as well (without one the fixed-capacity "
-                "path runs and the bucket would be silently ignored)")
-        from repro.core.buckets import BucketSpec
-        plan = BucketSpec.from_any(bucket).apply(plan)
-    ring_caps = ring_chunk_caps(plan, ep) if plan is not None else None
+    if (bucket is not None or inter_bucket is not None) and plan is None:
+        raise ValueError(
+            "make_moe_ep(bucket=.../inter_bucket=...) quantizes a routing "
+            "plan's ring caps — pass plan= as well (without one the "
+            "fixed-capacity path runs and the bucket would be silently "
+            "ignored)")
+    if topology is not None and plan is not None:
+        # Per-link-class cap quantization: intra-node steps use ``bucket``,
+        # inter-node steps the (coarser) ``inter_bucket``.
+        ring_caps = ring_chunk_caps(plan, ep, topology=topology,
+                                    bucket=bucket,
+                                    inter_bucket=inter_bucket)
+    else:
+        if bucket is not None:
+            from repro.core.buckets import BucketSpec
+            plan = BucketSpec.from_any(bucket).apply(plan)
+        ring_caps = ring_chunk_caps(plan, ep) if plan is not None else None
 
     def moe_impl(params, x, mc: MoEConfig):
         B, S, d = x.shape

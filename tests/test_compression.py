@@ -1,0 +1,126 @@
+"""Property tests for cross-node compression (parallel/compression.py).
+
+The int8 error-feedback transform is what both the optimizer's cross-pod
+grad path and the hierarchical dispatch's inter-node hop rely on; these
+properties pin the contracts the rest of the stack assumes: the residual
+is carried exactly, compression error stays bounded over many steps
+(error feedback prevents accumulation), and the wire-byte accounting the
+cost model prices matches the payload shrinkage.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _proptest import given, settings, st
+
+from repro.parallel import compression as comp
+
+
+def _grad_arrays(shape_seed: int, scale: float, n: int) -> list[np.ndarray]:
+    rng = np.random.default_rng(shape_seed)
+    return [rng.normal(0.0, scale, size=(4, 6)).astype(np.float32)
+            for _ in range(n)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.sampled_from([1e-3, 0.1, 1.0, 30.0]))
+def test_int8_ef_residual_carried_exactly(seed, scale):
+    """One step: err == g + e_in - deq, elementwise (fp32 bookkeeping)."""
+    (g,) = _grad_arrays(seed, scale, 1)
+    params = {"w": jnp.asarray(g)}
+    e0 = comp.int8_ef_init(params)
+    deq, err = comp.int8_ef_compress({"w": jnp.asarray(g)}, e0)
+    want = (g.astype(np.float32) + np.asarray(e0["w"])
+            - np.asarray(deq["w"], dtype=np.float32))
+    np.testing.assert_allclose(np.asarray(err["w"]), want, rtol=0, atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.sampled_from([0.1, 1.0, 10.0]),
+       st.integers(min_value=2, max_value=8))
+def test_int8_ef_error_bounded_over_steps(seed, scale, steps):
+    """Error feedback keeps the carried residual bounded by one quantization
+    step of the *augmented* signal — it never accumulates across steps."""
+    grads = _grad_arrays(seed, scale, steps)
+    params = {"w": jnp.zeros_like(jnp.asarray(grads[0]))}
+    e = comp.int8_ef_init(params)
+    for g in grads:
+        deq, e = comp.int8_ef_compress({"w": jnp.asarray(g)}, e)
+        g32 = np.abs(g.astype(np.float32)).max() + np.abs(
+            np.asarray(e["w"])).max()
+        # One symmetric-int8 step of the augmented signal's amax scale.
+        bound = max(g32, 1e-12) / 127.0 + 1e-6
+        assert float(np.abs(np.asarray(e["w"])).max()) <= bound
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_int8_ef_sum_preserved(seed):
+    """Over K steps, sum(deq) + final residual == sum(g): nothing routed
+    through the compressor is ever lost, only delayed."""
+    grads = _grad_arrays(seed, 1.0, 6)
+    params = {"w": jnp.zeros_like(jnp.asarray(grads[0]))}
+    e = comp.int8_ef_init(params)
+    total = np.zeros_like(grads[0], dtype=np.float32)
+    for g in grads:
+        deq, e = comp.int8_ef_compress({"w": jnp.asarray(g)}, e)
+        total += np.asarray(deq["w"], dtype=np.float32)
+    want = np.sum([g.astype(np.float32) for g in grads], axis=0)
+    np.testing.assert_allclose(total + np.asarray(e["w"]), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.sampled_from([1e-4, 1.0, 100.0]))
+def test_int8_roundtrip_np_error_one_step(seed, scale):
+    """The numpy model of the inter-node hop: elementwise error within one
+    quantization step of the message's amax scale, zeros exact."""
+    (x,) = _grad_arrays(seed, scale, 1)
+    x = x.astype(np.float32)
+    y = comp.int8_roundtrip_np(x)
+    step = np.abs(x).max() / 127.0
+    assert np.abs(y - x).max() <= step * (0.5 + 1e-6) + 1e-12
+    z = np.zeros((3, 3), dtype=np.float32)
+    assert (comp.int8_roundtrip_np(z) == z).all()
+
+
+def test_int8_roundtrip_preserves_dtype():
+    x16 = np.linspace(-2, 2, 32, dtype=np.float16)
+    assert comp.int8_roundtrip_np(x16).dtype == np.float16
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=4096),
+       st.sampled_from([2, 4]))
+def test_int8_wire_bytes_shrinks_payload(rows, db):
+    """Wire bytes = one int8 per element + the fixed scale header; for any
+    payload past a few elements this undercuts the raw dtype bytes by
+    ~db x, which is exactly what the cost model prices on the slow link."""
+    nbytes = rows * 64 * db                  # rows x 64-element rows
+    wire = comp.int8_wire_bytes(nbytes, db)
+    assert wire == nbytes // db + comp.INT8_SCALE_BYTES
+    if nbytes >= 4 * comp.INT8_SCALE_BYTES:
+        assert wire < nbytes
+
+
+def test_bf16_roundtrip_halves_bytes_and_bounds_error():
+    """bf16 cast: half the wire bytes of fp32, relative error <= 2^-8."""
+    rng = np.random.default_rng(7)
+    g = rng.normal(0, 3.0, size=(16, 16)).astype(np.float32)
+    out = comp.bf16_compress({"g": jnp.asarray(g)})
+    y = np.asarray(out["g"], dtype=np.float32)
+    assert jnp.asarray(g).astype(jnp.bfloat16).nbytes == g.nbytes // 2
+    rel = np.abs(y - g) / np.maximum(np.abs(g), 1e-12)
+    assert rel.max() <= 2.0 ** -8 + 1e-6
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

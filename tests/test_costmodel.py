@@ -24,8 +24,13 @@ def test_comm_cost_local_vs_remote():
     local = cm.task_us(_comm_td(1 << 20, 0, 0))
     remote = cm.task_us(_comm_td(1 << 20, 0, 1))
     assert local == pytest.approx((1 << 20) / (hw.hbm_gbps * 1e3))
-    assert remote == pytest.approx((1 << 20) / (hw.link_gbps * 1e3))
+    assert remote == pytest.approx(
+        hw.hop_latency_us + (1 << 20) / (hw.link_gbps * 1e3))
     assert local < remote
+    # The latency floor: a tiny remote message is not free, a local copy
+    # pays no hop latency.
+    assert cm.task_us(_comm_td(64, 0, 1)) >= hw.hop_latency_us
+    assert cm.task_us(_comm_td(64, 0, 0)) < hw.hop_latency_us
 
 
 def test_cube_cost_l2_residency_band():

@@ -1,0 +1,461 @@
+"""Topology-aware hierarchical EP: geometry, pricing, execution, caching.
+
+The contract under test, end to end:
+
+* :class:`~repro.core.hardware.Topology` classifies every (src, dst) pair
+  into local / intra-node / inter-node link classes;
+* two-level dispatch (``dispatch_mode="hier"``) compiles to ordinary tile
+  tasks that execute **bit-identical** to flat dispatch (exact with
+  compression off, within one quantization step with int8);
+* the cost model prices each put on its link class, the simulator
+  accounts busy time per class, and auto-selection never picks a
+  candidate predicted worse than the best flat one;
+* the SSC cache never aliases schedules compiled under different cluster
+  shapes or dispatch modes.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import autoselect
+from repro.core import executor as ex
+from repro.core.costmodel import CostModel
+from repro.core.hardware import AscendA3, Topology
+from repro.core.odg import (ScheduleConfig, build_moe_ffn_backward,
+                            build_moe_ffn_forward)
+from repro.core.passes import SCHED_PIPELINES, registered_passes
+from repro.core.routing import (HierDispatch, RoutingPlan, aggregate_group,
+                                balanced_plan, hotspot_plan,
+                                node_limited_plan, random_plan, skewed_plan)
+from repro.core.scheduler import compile_schedule, validate_schedule
+from repro.core.simulator import simulate_unified
+from repro.core.ssc import SSCCache
+from repro.core.tasks import TaskDescriptor
+from repro.parallel.ep import ring_chunk_caps
+
+TOPO = Topology(ranks_per_node=4)
+
+
+def _plan_grid():
+    rng = np.random.default_rng(5)
+    return [
+        ("zipf", skewed_plan(8, 4, 12, 1.6)),
+        ("hotspot", hotspot_plan(8, 4, 12, background=2)),
+        ("node_limited", node_limited_plan(8, 4, 12, node_size=4)),
+        ("sparse", random_plan(8, 4, 9, rng, p_zero=0.6)),
+        ("balanced", balanced_plan(8, 4, 8)),
+    ]
+
+
+def _cfg(plan, d_model=64, **kw):
+    return ScheduleConfig(ep=plan.ep, e_loc=plan.e_loc, rows=0,
+                          d_model=d_model, d_ff=d_model // 2, plan=plan,
+                          gmm_split_mode="source_aligned", topology=TOPO,
+                          **kw)
+
+
+# ---------------------------------------------------------------------------
+# Topology basics
+# ---------------------------------------------------------------------------
+
+def test_topology_link_classes():
+    t = Topology(ranks_per_node=4)
+    assert t.link_class(1, 1) == "local"
+    assert t.link_class(0, 3) == "intra"
+    assert t.link_class(3, 4) == "inter"
+    assert t.node_of(7) == 1 and t.node_of(3) == 0
+    assert t.n_nodes(8) == 2
+    assert t.bw_gbps("intra") > t.bw_gbps("inter")
+    assert t.latency_us("inter") > t.latency_us("intra")
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        Topology(ranks_per_node=0)
+    with pytest.raises(ValueError):
+        Topology(ranks_per_node=4, inter_gbps=-1.0)
+    with pytest.raises(ValueError):
+        Topology(ranks_per_node=3).n_nodes(8)
+    with pytest.raises(ValueError):
+        # config-level guard: ep must be a multiple of ranks_per_node
+        ScheduleConfig(ep=6, e_loc=2, rows=4, d_model=8, d_ff=4,
+                       topology=Topology(ranks_per_node=4))
+
+
+def test_topology_key_is_identity():
+    a = Topology(ranks_per_node=4)
+    b = Topology(ranks_per_node=4)
+    c = Topology(ranks_per_node=4, inter_gbps=25.0)
+    assert a.key() == b.key() and a.key() != c.key()
+
+
+# ---------------------------------------------------------------------------
+# Selective aggregation geometry
+# ---------------------------------------------------------------------------
+
+def test_aggregate_group_rule():
+    # Singletons never aggregate: the extra hop buys no latency back.
+    assert not aggregate_group([100], None)
+    assert not aggregate_group([], 10.0)
+    # No threshold = aggregate every multi-cell group.
+    assert aggregate_group([1, 1], None)
+    # Latency-bound groups aggregate, byte-bound groups stay direct:
+    # total rows <= (n_cells - 1) * agg_rows.
+    assert aggregate_group([5, 5, 5], 10.0)       # 15 <= 20
+    assert not aggregate_group([50, 5, 5], 10.0)  # 60 > 20
+
+
+def test_hier_layout_contiguous_and_conserving():
+    plan = skewed_plan(8, 4, 12, 1.6)
+    hier = HierDispatch(plan, 4)          # no threshold: aggregate all >= 2
+    staged = 0
+    for leader in range(8):
+        run = 0
+        for (d, e, srcs, total) in hier.stage_groups(leader):
+            assert hier.leader(hier.node_of(leader), d, e) == leader
+            assert hier.group_offset(leader, d, e) == run
+            off = run
+            for s, c in srcs:
+                assert hier.cell_offset(leader, d, e, s) == off
+                off += c
+            assert off - run == total
+            run = off
+            lo, rows = hier.recv_node_span(d, e, hier.node_of(leader))
+            assert rows == total
+            staged += total
+        assert hier.stage_rows(leader) == run
+    # Every aggregated cross-node row is staged exactly once.
+    want = sum(int(plan.count(s, d, e))
+               for s in range(8) for d in range(8) for e in range(4)
+               if s // 4 != d // 4
+               and hier.aggregated(s // 4, d, e))
+    assert staged == want
+
+
+def test_hier_threshold_moves_groups_to_direct_path():
+    plan = hotspot_plan(8, 4, 12, background=2)
+    all_agg = HierDispatch(plan, 4)
+    thresholded = HierDispatch(plan, 4, agg_rows=6.0)
+    n_all = sum(all_agg.n_stage_groups(r) for r in range(8))
+    n_thr = sum(thresholded.n_stage_groups(r) for r in range(8))
+    assert 0 < n_thr < n_all          # the hot cell's group went direct
+    assert not thresholded.aggregated(1, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# node_limited_plan scenario
+# ---------------------------------------------------------------------------
+
+def test_node_limited_plan_conserves_and_confines():
+    plan = node_limited_plan(8, 4, 16, node_size=4, m_nodes=1, leak=0.05)
+    c = np.asarray(plan.counts, dtype=np.int64)
+    per_src = c.sum(axis=(1, 2))
+    assert (per_src == 8 * 4 * 16).all()      # exact conservation per source
+    for s in range(8):
+        home = s // 4
+        allowed = c[s, home * 4:(home + 1) * 4, :].sum()
+        assert allowed >= 0.9 * per_src[s]    # >= 1 - leak goes to home node
+
+
+# ---------------------------------------------------------------------------
+# Cost model per-link-class pricing
+# ---------------------------------------------------------------------------
+
+def _put(nbytes, src, dst):
+    return TaskDescriptor(task_type="put_mem_signal", queue_type="VTQ",
+                          comm_bytes=nbytes, src_rank=src, dst_rank=dst,
+                          rank=src)
+
+
+def test_costmodel_prices_link_classes():
+    cm = CostModel(hw=AscendA3(), topology=TOPO, l2=False)
+    n = 1 << 20
+    local = cm.task_us(_put(n, 2, 2))
+    intra = cm.task_us(_put(n, 0, 2))
+    inter = cm.task_us(_put(n, 0, 5))
+    assert local < intra < inter
+    assert cm.link_class_of(_put(n, 0, 5)) == "inter"
+    assert cm.link_class_of(_put(n, 0, 2)) == "intra"
+    # Latency floor: a tiny inter-node message is never cheaper than the
+    # per-hop latency; a local copy has no such floor.
+    assert cm.task_us(_put(16, 0, 5)) >= TOPO.inter_hop_us
+    assert cm.task_us(_put(16, 2, 2)) < TOPO.intra_hop_us
+
+
+def test_costmodel_flat_link_latency_floor():
+    cm = CostModel(hw=AscendA3(), l2=False)       # no topology: one "link"
+    assert cm.task_us(_put(16, 0, 5)) >= cm.hw.hop_latency_us
+    assert cm.link_class_of(_put(16, 0, 5)) == "link"
+
+
+# ---------------------------------------------------------------------------
+# Compilation + executor parity, forward and backward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,plan", _plan_grid())
+@pytest.mark.parametrize("m_split", [1, 6])
+def test_hier_compiles_and_validates(name, plan, m_split):
+    for build in (build_moe_ffn_forward, build_moe_ffn_backward):
+        s = compile_schedule(
+            build(_cfg(plan, gmm_m_split=m_split, dispatch_mode="hier")),
+            pipeline=["ratr", "gmm_interleave", "critical_rank_first",
+                      "hier_dispatch"])
+        validate_schedule(s)
+
+
+@pytest.mark.parametrize("name,plan", _plan_grid())
+@pytest.mark.parametrize("m_split", [1, 6])
+def test_hier_forward_parity_with_flat(name, plan, m_split):
+    """Hier recv buffers are bit-identical to flat for every tiling; the
+    end-to-end output is bit-identical at m_split=1 (identical GMM tiles)
+    and allclose beyond (BLAS blocking differs with tile shapes)."""
+    flat_cfg = _cfg(plan, gmm_m_split=m_split)
+    hier_cfg = _cfg(plan, gmm_m_split=m_split, dispatch_mode="hier")
+    x, w1, w2 = ex.make_inputs_plan(flat_cfg, 7)
+    out = {}
+    for tag, cfg in (("flat", flat_cfg), ("hier", hier_cfg)):
+        s = compile_schedule(build_moe_ffn_forward(cfg),
+                             pipeline=["ratr", "hier_dispatch"])
+        st = ex.ExecutorState(cfg)
+        ex.load_forward_state_plan(cfg, st, x, w1, w2)
+        ex.execute(s, st, rng=np.random.default_rng(3))
+        out[tag] = st
+    for r in range(plan.ep):
+        if plan.recv_rows(r):
+            np.testing.assert_array_equal(out["flat"].get("x_recv", r),
+                                          out["hier"].get("x_recv", r))
+        if plan.send_rows(r):
+            a = out["flat"].get("y_ret", r)
+            b = out["hier"].get("y_ret", r)
+            if m_split == 1:
+                np.testing.assert_array_equal(a, b)
+            else:
+                np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name,plan", _plan_grid()[:3])
+def test_hier_backward_parity_with_flat(name, plan):
+    flat_cfg = _cfg(plan, gmm_m_split=1)
+    hier_cfg = _cfg(plan, gmm_m_split=1, dispatch_mode="hier")
+    x, w1, w2 = ex.make_inputs_plan(flat_cfg, 11)
+    fwd = ex.reference_forward_plan(flat_cfg, x, w1, w2)
+    rng = np.random.default_rng(13)
+    dy = [rng.standard_normal(fwd["y_ret"][r].shape).astype(np.float32)
+          for r in range(plan.ep)]
+    out = {}
+    for tag, cfg in (("flat", flat_cfg), ("hier", hier_cfg)):
+        s = compile_schedule(build_moe_ffn_backward(cfg),
+                             pipeline=["ratr", "hier_dispatch"])
+        st = ex.ExecutorState(cfg)
+        ex.load_backward_state_plan(cfg, st, fwd, w1, w2, dy)
+        ex.execute(s, st, rng=np.random.default_rng(1))
+        out[tag] = st
+    for r in range(plan.ep):
+        if plan.recv_rows(r):
+            np.testing.assert_array_equal(out["flat"].get("dy_recv", r),
+                                          out["hier"].get("dy_recv", r))
+            np.testing.assert_array_equal(out["flat"].get("dW1", r),
+                                          out["hier"].get("dW1", r))
+        if plan.send_rows(r):
+            np.testing.assert_array_equal(out["flat"].get("dx_ret", r),
+                                          out["hier"].get("dx_ret", r))
+
+
+def test_hier_int8_parity_within_quantization():
+    plan = skewed_plan(8, 4, 12, 1.6)
+    flat_cfg = _cfg(plan, gmm_m_split=1)
+    comp_cfg = _cfg(plan, gmm_m_split=1, dispatch_mode="hier",
+                    xnode_compress="int8")
+    x, w1, w2 = ex.make_inputs_plan(flat_cfg, 7)
+    out = {}
+    for tag, cfg in (("flat", flat_cfg), ("int8", comp_cfg)):
+        s = compile_schedule(build_moe_ffn_forward(cfg),
+                             pipeline=["ratr", "hier_dispatch"])
+        st = ex.ExecutorState(cfg)
+        ex.load_forward_state_plan(cfg, st, x, w1, w2)
+        ex.execute(s, st, rng=np.random.default_rng(3))
+        out[tag] = st
+    saw_delta = False
+    for r in range(plan.ep):
+        if not plan.recv_rows(r):
+            continue
+        a = out["flat"].get("x_recv", r)
+        b = out["int8"].get("x_recv", r)
+        # Per-message symmetric int8: error within half a quantization step
+        # of each message's amax; one global bound of the whole buffer's
+        # amax covers every message.
+        step = np.abs(a).max() / 127.0
+        np.testing.assert_allclose(b, a, rtol=0, atol=step * 0.5 + 1e-7)
+        saw_delta |= not np.array_equal(a, b)
+    assert saw_delta          # compression actually touched the inter hop
+
+
+# ---------------------------------------------------------------------------
+# Simulator per-link-class accounting
+# ---------------------------------------------------------------------------
+
+def test_simulator_link_class_accounting():
+    plan = skewed_plan(8, 4, 12, 1.6)
+    hw = AscendA3()
+    cost = CostModel(hw=hw, topology=TOPO)
+    s = compile_schedule(build_moe_ffn_forward(_cfg(plan)), ratr=True)
+    r = simulate_unified(s, hw, cost=cost)
+    assert set(r.link_us) == {"local", "intra", "inter"}
+    assert r.link_us["inter"] > 0 and r.link_us["intra"] > 0
+    # Without a topology the same schedule accounts on the flat classes.
+    r0 = simulate_unified(
+        compile_schedule(build_moe_ffn_forward(
+            dataclasses.replace(_cfg(plan), topology=None)), ratr=True),
+        hw)
+    assert set(r0.link_us) == {"local", "link"}
+
+
+def test_hier_reduces_inter_node_busy():
+    plan = node_limited_plan(8, 4, 16, node_size=4)
+    hw = AscendA3()
+    cost = CostModel(hw=hw, topology=TOPO)
+    flat = simulate_unified(compile_schedule(
+        build_moe_ffn_forward(_cfg(plan)),
+        pipeline=["ratr", "hier_dispatch"]), hw, cost=cost)
+    hier = simulate_unified(compile_schedule(
+        build_moe_ffn_forward(_cfg(plan, dispatch_mode="hier")),
+        pipeline=["ratr", "hier_dispatch"]), hw, cost=cost)
+    assert hier.link_us["inter"] < flat.link_us["inter"]
+
+
+# ---------------------------------------------------------------------------
+# Passes: hier_dispatch registration + flat no-op; node-aware RATR
+# ---------------------------------------------------------------------------
+
+def test_hier_dispatch_pass_registered_not_in_pipelines():
+    assert "hier_dispatch" in registered_passes()
+    # Locked contract: selection variants ride config changes, not new
+    # pipeline names.
+    assert set(SCHED_PIPELINES) == {"naive", "ratr", "ratr+gmm_il",
+                                    "ratr+crit", "all"}
+
+
+def test_hier_dispatch_pass_noop_on_flat():
+    plan = skewed_plan(8, 4, 12, 1.6)
+    base = compile_schedule(build_moe_ffn_forward(_cfg(plan)),
+                            pipeline=["ratr"])
+    passed = compile_schedule(build_moe_ffn_forward(_cfg(plan)),
+                              pipeline=["ratr", "hier_dispatch"])
+    assert base.queues == passed.queues
+
+
+def test_node_aware_ratr_orders_nodes_first():
+    plan = balanced_plan(8, 2, 4)
+    s = compile_schedule(build_moe_ffn_forward(_cfg(plan)),
+                         pipeline=["ratr"])
+    # Rank 0's dispatch block must visit every remote-node destination
+    # before wrapping back to its own node (ranks 1..3 come after 4..7).
+    q = s.queues[(0, "VTQ")]
+    dsts = [s.tasks[t].dst_rank for t in q
+            if s.tasks[t].task_type == "put_mem_signal"
+            and s.tasks[t].meta.get("comm_kind") == "dispatch"
+            and s.tasks[t].dst_rank >= 0]
+    remote = [d for d in dsts if d != 0]
+    first_other_node = [d >= 4 for d in remote]
+    assert all(first_other_node[:sum(first_other_node)])  # inter block first
+
+
+# ---------------------------------------------------------------------------
+# Auto-selection
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,plan", _plan_grid()[:3])
+@pytest.mark.parametrize("direction", ["forward", "backward"])
+def test_autoselect_never_worse_than_flat(name, plan, direction):
+    choice = autoselect.select(None, _cfg(plan, d_model=1024),
+                               direction=direction)
+    flat_best = min(s.predicted_us for s in choice.scores
+                    if s.cfg.dispatch_mode == "flat")
+    assert choice.predicted_us <= flat_best
+    assert any(s.cfg.dispatch_mode == "hier" for s in choice.scores)
+
+
+def test_autoselect_no_hier_without_topology():
+    plan = skewed_plan(8, 4, 12, 1.6)
+    cfg = dataclasses.replace(_cfg(plan), topology=None)
+    choice = autoselect.select(None, cfg)
+    assert all(s.cfg.dispatch_mode == "flat" for s in choice.scores)
+
+
+def test_autoselect_hier_choice_compiles():
+    plan = node_limited_plan(8, 4, 16, node_size=4)
+    choice = autoselect.select(None, _cfg(plan, d_model=1024))
+    s = compile_schedule(
+        (build_moe_ffn_forward if True else None)(choice.cfg),
+        pipeline=choice.pipeline)
+    validate_schedule(s)
+
+
+# ---------------------------------------------------------------------------
+# SSC cache keying
+# ---------------------------------------------------------------------------
+
+def test_ssc_key_separates_topology_and_dispatch_mode():
+    plan = skewed_plan(8, 4, 12, 1.6)
+    base = _cfg(plan)
+    keys = {
+        SSCCache.key(base, "forward", pipeline=["ratr"]),
+        SSCCache.key(dataclasses.replace(base, topology=None), "forward",
+                     pipeline=["ratr"]),
+        SSCCache.key(dataclasses.replace(base, dispatch_mode="hier"),
+                     "forward", pipeline=["ratr"]),
+        SSCCache.key(dataclasses.replace(base, dispatch_mode="hier",
+                                         xnode_compress="int8"),
+                     "forward", pipeline=["ratr"]),
+        SSCCache.key(dataclasses.replace(
+            base, topology=Topology(ranks_per_node=2)), "forward",
+            pipeline=["ratr"]),
+    }
+    assert len(keys) == 5
+
+
+def test_ssc_roundtrip_hier_schedule():
+    plan = node_limited_plan(8, 4, 12, node_size=4)
+    cache = SSCCache()
+    cfg = _cfg(plan, dispatch_mode="hier")
+    s1 = cache.get_or_compile(cfg, "forward",
+                              pipeline=["ratr", "hier_dispatch"])
+    s2 = cache.get_or_compile(cfg, "forward",
+                              pipeline=["ratr", "hier_dispatch"])
+    assert cache.hits >= 1
+    assert s1.queues == s2.queues
+    validate_schedule(s2)
+
+
+# ---------------------------------------------------------------------------
+# Ring caps per link class
+# ---------------------------------------------------------------------------
+
+def test_ring_caps_per_link_class_bucketing():
+    plan = random_plan(8, 2, 9, np.random.default_rng(3), p_zero=0.3)
+    exact = ring_chunk_caps(plan, 8)
+    caps = ring_chunk_caps(plan, 8, topology=TOPO, bucket=4,
+                           inter_bucket=32)
+    for k in range(8):
+        inter = any(not TOPO.same_node(s, (s + k) % 8) for s in range(8))
+        assert caps[k] >= exact[k]            # never undercounts
+        if exact[k] == 0:
+            assert caps[k] == 0               # step skipping survives
+        elif inter:
+            assert caps[k] % 32 == 0
+        else:
+            assert caps[k] % 4 == 0
+    # Single-node topology: every step quantizes on the intra ladder.
+    one_node = Topology(ranks_per_node=8)
+    caps1 = ring_chunk_caps(plan, 8, topology=one_node, bucket=4,
+                            inter_bucket=32)
+    assert all(c % 4 == 0 for c in caps1 if c)
+    with pytest.raises(ValueError):
+        ring_chunk_caps(plan, 8, inter_bucket=32)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))
