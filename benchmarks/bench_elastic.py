@@ -1,0 +1,103 @@
+"""Elastic rescale path latency — remap, re-key, and biased selection.
+
+A rank loss puts three operations on the recovery critical path before
+the first post-rescale step can compile: ``remap_plan`` (per live plan),
+``SSCCache.rekey_for_mesh`` (once, over the resident population), and an
+``autoselect`` pass under the observed-time-biased cost model. All three
+are host-side bookkeeping — they must stay orders of magnitude under a
+single schedule compile (~1 s at dense ep=8), or "elastic" restart is
+elastic in name only. Emits per-op latency plus the remap fan of a
+realistic resident population, and asserts hard budgets so CI catches a
+remap that silently goes quadratic.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.autoselect import select, selection_cache_clear
+from repro.core.elastic import check_remap, observed_cost_model, remap_plan
+from repro.core.odg import ScheduleConfig
+from repro.core.routing import (balanced_plan, hotspot_plan, random_plan,
+                                skewed_plan)
+from repro.core.ssc import SSCCache
+
+from .common import emit
+
+EP, E_LOC, ROWS = 8, 8, 128
+D_MODEL, D_FF = 2048, 512
+REMAP_BUDGET_MS = 5.0       # per plan; compile is ~200x this
+REKEY_BUDGET_MS = 20.0      # once per rescale, whole resident population
+
+
+def _population(n: int):
+    rng = np.random.default_rng(7)
+    plans = []
+    for i in range(n):
+        kind = i % 3
+        if kind == 0:
+            plans.append(skewed_plan(EP, E_LOC, ROWS, 1.0 + 0.1 * i))
+        elif kind == 1:
+            plans.append(hotspot_plan(EP, E_LOC, ROWS, background=i))
+        else:
+            plans.append(random_plan(EP, E_LOC, ROWS, rng, p_zero=0.3))
+    return plans
+
+
+def run() -> None:
+    plans = _population(24)
+
+    # 64 experts re-chunk onto any power-of-two mesh; losing a node of 4
+    # ranks (8 -> 4) is the realistic shrink.
+    dead = list(range(EP // 2, EP))
+    t0 = time.perf_counter()
+    remapped = [remap_plan(p, dead_ranks=dead) for p in plans]
+    dt = time.perf_counter() - t0
+    per_plan_ms = dt / len(plans) * 1e3
+    assert per_plan_ms < REMAP_BUDGET_MS, per_plan_ms
+    emit("elastic_remap_plan", per_plan_ms * 1e3,
+         f"plans={len(plans)} ep={EP}->{EP // 2} budget={REMAP_BUDGET_MS}ms")
+
+    t0 = time.perf_counter()
+    ok = all(check_remap(p, q, tuple(range(EP // 2)))["ok"]
+             for p, q in zip(plans, remapped))
+    dt = time.perf_counter() - t0
+    assert ok
+    emit("elastic_check_remap", dt / len(plans) * 1e6,
+         f"all_ok={ok}")
+
+    # Re-key a resident cache population (no compiles timed — populate
+    # with tiny plans so the rekey cost dominates the scenario).
+    cache = SSCCache(max_entries=64)
+    for i, p in enumerate(_population(12)):
+        small = remap_plan(p, new_ep=4)
+        cfg = ScheduleConfig(ep=4, e_loc=small.e_loc, rows=0, d_model=64,
+                             d_ff=32, plan=small, bucket=4)
+        cache.get_or_compile(cfg, "forward", pipeline=["ratr"])
+    t0 = time.perf_counter()
+    out = cache.rekey_for_mesh(2)
+    dt_ms = (time.perf_counter() - t0) * 1e3
+    assert dt_ms < REKEY_BUDGET_MS, dt_ms
+    emit("elastic_rekey_for_mesh", dt_ms * 1e3,
+         f"entries={out['entries']} active={out['active']} "
+         f"evictions={cache.evictions}")
+
+    # Biased selection: the straggler feedback loop prices every candidate
+    # under rank_bias — same budget class as the unbiased selector.
+    selection_cache_clear()
+    # Balanced plan: the only skew is the observed bias, so the pick
+    # doubling as a sanity signal — critical_rank_first should fire.
+    plan = balanced_plan(EP, E_LOC, ROWS)
+    cfg = ScheduleConfig(ep=EP, e_loc=E_LOC, rows=ROWS, d_model=D_MODEL,
+                         d_ff=D_FF, plan=plan)
+    times = [100.0] * EP
+    times[3] = 300.0
+    cm = observed_cost_model(times)
+    t0 = time.perf_counter()
+    choice = select(plan, cfg, cm)
+    dt_ms = (time.perf_counter() - t0) * 1e3
+    names = [n for n, _ in choice.pipeline.key()]
+    emit("elastic_biased_select", dt_ms * 1e3,
+         f"pick={choice.tag} crit_pass={'critical_rank_first' in names}")

@@ -34,6 +34,8 @@ SECTIONS = [
      "benchmarks.bench_fusion"),
     ("topology", "Topology-aware hierarchical EP: two-level vs flat dispatch",
      "benchmarks.bench_topology"),
+    ("elastic", "Elastic rescale path: remap / re-key / biased selection",
+     "benchmarks.bench_elastic"),
     ("ep_modes", "EP mode comparison on the JAX system",
      "benchmarks.bench_ep_modes"),
     ("roofline", "TPU roofline table from the dry-run",

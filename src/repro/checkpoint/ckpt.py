@@ -30,6 +30,30 @@ import numpy as np
 
 _SHARD_LEAVES = 64  # leaves per npz shard
 
+# Fault-injection seam for the atomicity tests: every state-changing file
+# operation of save() announces itself through this hook, so a harness can
+# SIGKILL the writer between any two operations and assert latest_step_dir
+# never resolves to the partial checkpoint. Production never installs one.
+_file_hook = None
+
+
+def set_file_fault_hook(hook) -> None:
+    """Install (``None`` clears) the ``save()`` file-op callback.
+
+    ``hook(op)`` runs immediately *before* each file-mutating operation:
+    ``mkdir_tmp``, ``write_shard``, ``write_manifest``, ``write_complete``,
+    ``rename_final``, ``write_latest``, ``replace_latest``. The hook may
+    raise or kill the process — the atomicity contract is that no prefix of
+    these operations leaves a state ``latest_step_dir`` would resolve to.
+    """
+    global _file_hook
+    _file_hook = hook
+
+
+def _file_op(op: str) -> None:
+    if _file_hook is not None:
+        _file_hook(op)
+
 # npz cannot store bfloat16 — persist the exact bit pattern as uint16 and
 # reinterpret on restore (recorded via the manifest's dtype field).
 _BITCAST = {"bfloat16": np.uint16}
@@ -62,6 +86,7 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
+    _file_op("mkdir_tmp")
     os.makedirs(tmp)
 
     flat = _flatten(tree)
@@ -81,17 +106,23 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
                 "shard": shard_name,
                 "crc32": zlib.crc32(np.ascontiguousarray(stored).tobytes()),
             }
+        _file_op("write_shard")
         np.savez(os.path.join(tmp, shard_name), **arrays)
         manifest["shards"].append(shard_name)
+    _file_op("write_manifest")
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    _file_op("write_complete")
     with open(os.path.join(tmp, "_COMPLETE"), "w") as f:
         f.write("ok")
     if os.path.exists(final):
         shutil.rmtree(final)
+    _file_op("rename_final")
     os.rename(tmp, final)
+    _file_op("write_latest")
     with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
         f.write(os.path.basename(final))
+    _file_op("replace_latest")
     os.replace(os.path.join(ckpt_dir, "latest.tmp"),
                os.path.join(ckpt_dir, "latest"))
     return final

@@ -68,6 +68,11 @@ _IL_GAIN = 0.06          # backward branch interleave, imbalanced plans
 _IL_LOSS = 0.02          # backward branch interleave, balanced plans
 _CRIT_CHAIN_GAIN = 0.25  # starved-chain interleave on the critical rank
 _CRIT_HOIST_LOSS = 0.25  # peer-latency trade of the comm hoist (graded skew)
+# Observed rank bias at which the comm hoist flips to a win: when the
+# critical rank is critical because it is *measured* slow (not because its
+# plan cells are heavy), its peers finish early anyway — hoisting the
+# straggler's comm ahead of their compute costs the peers slack they have.
+_BIAS_CRIT = 1.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -339,7 +344,8 @@ def _price_context(cfg: ScheduleConfig, direction: str,
     n_dom, n_other, max_tile_rows = _crit_tiles(plan, cfg, max(crit, 0))
     flops_row = max(f for _, f in _gmm_ops(direction, cfg.d_model, cfg.d_ff))
     drain = cost.task_us(TaskDescriptor(
-        task_type="GMM", queue_type=CTQ, flops=flops_row * max_tile_rows))
+        task_type="GMM", queue_type=CTQ, rank=max(crit, 0),
+        flops=flops_row * max_tile_rows))
     return _PriceContext(
         feats=feats, crit_us=cube.get(crit, 0.0), ratio=ratio, crit=crit,
         base_us=max(per_rank) if per_rank else 0.0,
@@ -390,6 +396,10 @@ def predict_makespan_us(cfg: ScheduleConfig, direction: str,
         else:
             t -= _IL_GAIN * crit_cube_pool
 
+    biased = (cost.rank_bias is not None and ctx.crit >= 0
+              and ctx.crit < len(cost.rank_bias)
+              and cost.rank_bias[ctx.crit] >= _BIAS_CRIT)
+
     if "critical_rank_first" in names and fires:
         if il_active:
             # The branch interleave already owns the critical rank's CTQ
@@ -402,6 +412,11 @@ def predict_makespan_us(cfg: ScheduleConfig, direction: str,
             # with the tail of the producer chain (lag = 2 * pool width).
             t -= (_CRIT_CHAIN_GAIN * crit_cube_pool
                   * max(0.0, 1.0 - 2 * hw.num_aic / max(1, ctx.n_dom)))
+        elif biased:
+            # Observed-slow critical rank: peers have measured slack, so
+            # hoisting the straggler's comm ahead of peer compute is free —
+            # the peer-latency trade that costs on plan-driven skew wins.
+            t -= _CRIT_HOIST_LOSS * ctx.link_mean
         elif not feats.hotspot:
             # Comm hoist trades peer latency for straggler latency; on
             # graded skew the peers' loss wins (sweep: skewed scenarios).

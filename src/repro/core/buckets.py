@@ -71,6 +71,13 @@ class BucketSpec:
     base: int = 8                      # geometric: first rung
     growth: float = 2.0                # geometric: rung ratio
     edges: tuple = ()                  # ladder: sorted rung values
+    # Mesh-size tag: bucket ladders are per-mesh-size populations (a plan's
+    # cell shape is [ep, ep, e_loc], so a ladder fit at ep=8 says nothing
+    # about ep=7 cells). ``None`` = untagged; untagged specs key/print
+    # byte-identically to the pre-tag format, so resident cache keys and
+    # serialized blobs stay valid. ``SSCCache.rekey_for_mesh`` migrates
+    # entries between mesh populations by rewriting this tag.
+    ep: Optional[int] = None
 
     # -- constructors --------------------------------------------------------
     @classmethod
@@ -105,6 +112,17 @@ class BucketSpec:
         if self.policy not in _POLICIES:
             raise ValueError(f"unknown bucket policy {self.policy!r}; "
                              f"choices: {_POLICIES}")
+        if self.ep is not None and int(self.ep) < 1:
+            raise ValueError(f"bucket ep tag must be >= 1, got {self.ep}")
+
+    def for_mesh(self, ep: Optional[int]) -> "BucketSpec":
+        """This policy tagged to the ``ep``-rank mesh population
+        (``None`` untags). Quantization is unchanged — the tag only
+        separates cache-key populations per mesh size."""
+        ep = int(ep) if ep is not None else None
+        if ep == self.ep:
+            return self
+        return dataclasses.replace(self, ep=ep)
 
     # -- identity / serialization -------------------------------------------
     def key(self) -> tuple:
@@ -113,13 +131,19 @@ class BucketSpec:
         ``linear(rows)`` keys as ``("linear", rows)`` — by construction the
         same tuple whether it came from the legacy ``bucket_rows`` int shim
         or an explicit spec, which is the key-identity contract the
-        dropless shim test pins.
+        dropless shim test pins. A mesh tag appends ``("ep", n)``:
+        ``linear(16).for_mesh(4)`` keys as ``("linear", 16, ("ep", 4))``,
+        while untagged specs keep the pre-tag byte-identical form.
         """
         if self.policy == "linear":
-            return ("linear", self.rows)
-        if self.policy == "geometric":
-            return ("geometric", self.base, self.growth)
-        return ("ladder", self.edges)
+            k = ("linear", self.rows)
+        elif self.policy == "geometric":
+            k = ("geometric", self.base, self.growth)
+        else:
+            k = ("ladder", self.edges)
+        if self.ep is not None:
+            k = k + (("ep", self.ep),)
+        return k
 
     def spec(self) -> list:
         """msgpack/JSON-safe form of :meth:`key` (tuples become lists)."""
@@ -132,18 +156,27 @@ class BucketSpec:
 
     def __str__(self) -> str:
         if self.policy == "linear":
-            return f"linear:{self.rows}"
-        if self.policy == "geometric":
+            s = f"linear:{self.rows}"
+        elif self.policy == "geometric":
             g = (f"x{self.growth:g}" if self.growth != 2.0 else "")
-            return f"geometric:{self.base}{g}"
-        return "ladder:" + ",".join(str(e) for e in self.edges)
+            s = f"geometric:{self.base}{g}"
+        else:
+            s = "ladder:" + ",".join(str(e) for e in self.edges)
+        return s + (f"@ep{self.ep}" if self.ep is not None else "")
 
     @classmethod
     def parse(cls, text: str) -> "BucketSpec":
         """Parse the CLI form: ``"16"`` (legacy linear), ``"exact"``,
         ``"linear:16"``, ``"geometric:8"``, ``"geometric:8x1.5"``,
-        ``"ladder:4,8,32"``."""
+        ``"ladder:4,8,32"``; any form takes an ``@epN`` mesh-tag suffix
+        (``"linear:16@ep4"``)."""
         t = text.strip().lower()
+        if "@" in t:
+            t, _, tag = t.rpartition("@")
+            if not tag.startswith("ep") or not tag[2:].isdigit():
+                raise ValueError(
+                    f"bucket spec {text!r}: mesh tag must be '@epN'")
+            return cls.parse(t).for_mesh(int(tag[2:]))
         if t in ("exact", "none", "1"):
             return cls.exact()
         if ":" not in t:
@@ -186,13 +219,21 @@ class BucketSpec:
             return cls.parse(obj)
         if isinstance(obj, (tuple, list)) and obj \
                 and isinstance(obj[0], str):
+            ep = None
+            if (len(obj) > 1 and isinstance(obj[-1], (tuple, list))
+                    and len(obj[-1]) == 2 and obj[-1][0] == "ep"):
+                ep = int(obj[-1][1])
+                obj = obj[:-1]
             policy = obj[0]
+            spec = None
             if policy == "linear":
-                return cls.linear(obj[1])
-            if policy == "geometric":
-                return cls.geometric(obj[1], obj[2] if len(obj) > 2 else 2.0)
-            if policy == "ladder":
-                return cls.ladder(obj[1])
+                spec = cls.linear(obj[1])
+            elif policy == "geometric":
+                spec = cls.geometric(obj[1], obj[2] if len(obj) > 2 else 2.0)
+            elif policy == "ladder":
+                spec = cls.ladder(obj[1])
+            if spec is not None:
+                return spec.for_mesh(ep) if ep is not None else spec
         raise TypeError(f"cannot interpret {obj!r} as a BucketSpec")
 
     # -- quantization --------------------------------------------------------

@@ -38,6 +38,20 @@ class CostModel:
     # class (intra-node vs inter-node bandwidth and latency) instead of the
     # flat ``hw.link_gbps`` / ``hw.hop_latency_us``.
     topology: Optional[Topology] = None
+    # Observed per-rank slowdown factors (mean ≈ 1.0), fed back from the
+    # training loop's straggler watchdog (``ft.runner`` records per-rank
+    # step-time EWMAs; ``core.elastic.observed_cost_model`` normalizes them
+    # into this tuple). Every task executing on rank ``r`` is priced
+    # ``rank_bias[r]×`` slower, so a persistently slow rank becomes the
+    # compile-time critical rank that ``critical_rank_first`` and
+    # ``autoselect`` schedule around. A tuple (not a list) so the model
+    # stays frozen/hashable — it is part of the selector's memo key.
+    rank_bias: Optional[tuple] = None
+
+    def _bias(self, rank: int) -> float:
+        if self.rank_bias is None or not 0 <= rank < len(self.rank_bias):
+            return 1.0
+        return self.rank_bias[rank]
 
     def link_class_of(self, td) -> str:
         """Link class of a put task: local / intra / inter, or the flat
@@ -54,8 +68,12 @@ class CostModel:
 
         ``l2_hit_frac`` is the row-weighted fraction of the task's inputs
         resident in L2 (supplied by the simulator's LRU model; 0.0 for
-        compile-time estimates).
+        compile-time estimates). With ``rank_bias`` set, the result scales
+        by the executing rank's observed slowdown factor.
         """
+        return self._bias(td.rank) * self._task_us_unbiased(td, l2_hit_frac)
+
+    def _task_us_unbiased(self, td, l2_hit_frac: float = 0.0) -> float:
         hw = self.hw
         frac = l2_hit_frac if self.l2 else 0.0
         if td.task_type == "put_mem_signal":

@@ -21,7 +21,7 @@ Cache keying and bucketing semantics
     (ep, e_loc, d_model, d_ff, dtype_bytes,
      gmm_m_split, gmm_split_mode,
      cfg.routing.counts,          # the full per-(src, dst, expert) matrix
-     cfg.bucket,                  # BucketSpec.key() provenance (or None)
+     cfg.bucket @ ep,             # BucketSpec.key() tagged for_mesh(ep), or None
      cfg.topology.key(),          # cluster link shape (or None = flat links)
      cfg.dispatch_mode, cfg.xnode_compress,
      direction, pipeline.key())
@@ -196,6 +196,11 @@ class SSCCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # Elastic bookkeeping: rekey_for_mesh calls survived, and the mesh
+        # size whose entries currently get LRU priority (None = never
+        # rescaled — a fixed-mesh run).
+        self.rekeyed = 0
+        self.active_ep: Optional[int] = None
         # Padded-vs-exact row accounting (reported by bucketing consumers
         # via record_rows; the cache only ever sees bucketed plans, so it
         # cannot derive the exact rows itself).
@@ -235,9 +240,17 @@ class SSCCache:
         # depends on the link parameters), so schedules compiled under
         # different cluster shapes must never alias.
         topo = cfg.topology.key() if cfg.topology is not None else None
+        bucket = cfg.bucket
+        if bucket is not None:
+            # Bucket ladders are per-mesh-size populations (plan cells are
+            # [ep, ep, e_loc]); the key carries the spec tagged to this
+            # config's mesh so rekey_for_mesh can migrate populations
+            # without guessing which mesh an entry belonged to.
+            from .buckets import BucketSpec
+            bucket = BucketSpec.from_any(bucket).for_mesh(cfg.ep).key()
         return (cfg.ep, cfg.e_loc, cfg.d_model, cfg.d_ff, cfg.dtype_bytes,
                 cfg.gmm_m_split, cfg.gmm_split_mode, cfg.routing.counts,
-                cfg.bucket, topo, cfg.dispatch_mode, cfg.xnode_compress,
+                bucket, topo, cfg.dispatch_mode, cfg.xnode_compress,
                 direction, pipe.key())
 
     def get_or_compile(self, cfg: ScheduleConfig, direction: str,
@@ -272,6 +285,68 @@ class SSCCache:
             ek, _ = self._cache.popitem(last=False)
             self._frags.pop(ek, None)
             self.evictions += 1
+
+    # -- elastic re-keying (core/elastic.py rescale path) --------------------
+
+    @staticmethod
+    def _key_ep(k: tuple) -> int:
+        """Mesh size a resident key was compiled for (fused keys carry it
+        in their per-layer key tuple)."""
+        if k and k[0] == "fused":
+            layers = k[4]
+            return layers[0][0] if layers else -1
+        return k[0]
+
+    @staticmethod
+    def _tag_bucket(k: tuple) -> tuple:
+        """One plain key with a legacy untagged bucket field retagged to
+        the key's own mesh size (no-op for tagged or bucket-less keys)."""
+        b = k[8]
+        if b is None or (isinstance(b[-1], tuple) and len(b[-1]) == 2
+                         and b[-1][0] == "ep"):
+            return k
+        return k[:8] + (b + (("ep", k[0]),),) + k[9:]
+
+    @classmethod
+    def _retag_key(cls, k: tuple) -> tuple:
+        if k and k[0] == "fused":
+            return k[:4] + (tuple(cls._tag_bucket(lk) for lk in k[4]),)
+        return cls._tag_bucket(k)
+
+    def rekey_for_mesh(self, new_ep: int) -> dict:
+        """Re-key — never flush — the resident population for a new mesh.
+
+        Rank loss does not invalidate compiled schedules: an old-mesh blob
+        stays bit-correct should the mesh grow back, and the new mesh's
+        population fills through the normal ``get_or_compile`` path (whose
+        keys lead with ``cfg.ep`` and carry ``ep``-tagged bucket specs, so
+        mesh populations never alias). This method (1) retags any legacy
+        untagged bucket fields in resident keys with their own mesh size,
+        (2) boosts the ``new_ep`` population to the MRU end — stale-mesh
+        entries bear the LRU eviction pressure first — and (3) records
+        ``active_ep`` so ``info()`` reports occupancy per mesh.
+
+        Returns ``{"entries", "active", "stale", "retagged"}`` counts.
+        """
+        if new_ep < 1:
+            raise ValueError(f"new_ep must be >= 1, got {new_ep}")
+        retagged = 0
+        items = []
+        for k, blob in list(self._cache.items()):
+            nk = self._retag_key(k)
+            if nk != k:
+                retagged += 1
+                self._frags[nk] = self._frags.pop(k, 1)
+            items.append((nk, blob))
+        self._cache = OrderedDict(items)
+        # MRU-boost the new mesh's entries in their existing relative order.
+        for k in [k for k in self._cache if self._key_ep(k) == new_ep]:
+            self._cache.move_to_end(k)
+        self.active_ep = int(new_ep)
+        self.rekeyed += 1
+        active = sum(1 for k in self._cache if self._key_ep(k) == new_ep)
+        return {"entries": len(self._cache), "active": active,
+                "stale": len(self._cache) - active, "retagged": retagged}
 
     def get_or_compile_fused(self, cfgs, direction: str, pipeline=None,
                              pipelines=None,
@@ -349,6 +424,11 @@ class SSCCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "rekeyed": self.rekeyed,
+            "active_ep": self.active_ep,
+            "by_ep": dict(sorted(
+                (ep, sum(1 for k in self._cache if self._key_ep(k) == ep))
+                for ep in {self._key_ep(k) for k in self._cache})),
             "exact_rows": self.exact_rows,
             "padded_rows": self.padded_rows,
             "pad_ratio": self._pad_ratio(self.padded_rows, self.exact_rows),

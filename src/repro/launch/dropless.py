@@ -141,6 +141,33 @@ class DroplessMoE:
         self._snapshot = (info["hits"], info["misses"], info["evictions"],
                           info["exact_rows"], info["padded_rows"])
 
+    def rescale(self, new_ep: Optional[int] = None,
+                dead_ranks=None) -> "DroplessMoE":
+        """A fresh impl on the surviving mesh, sharing this handle's cache.
+
+        The elastic-rescale entry point of the dropless path: pass the new
+        mesh size directly or the lost ranks (``new_ep`` defaults to the
+        survivor count). The shared ``SSCCache`` is **re-keyed** for the
+        new mesh — old-mesh entries stay resident (they hit again should
+        the mesh grow back) but bear the LRU pressure first, and the new
+        handle's per-batch plans compile through the normal
+        ``plan_from_routing`` → SSC path with ``ep``-tagged bucket keys, so
+        the two mesh populations never alias. Remapped plans
+        (``core.elastic.remap_plan``) execute bit-for-bit like plans built
+        natively on the small mesh, so no schedule state needs migrating.
+        """
+        if new_ep is None:
+            if dead_ranks is None:
+                raise ValueError("pass new_ep= and/or dead_ranks=")
+            from repro.core.elastic import surviving_ranks
+            new_ep = len(surviving_ranks(self.dc.ep, dead_ranks))
+        new_ep = int(new_ep)
+        if new_ep < 1:
+            raise ValueError(f"new_ep must be >= 1, got {new_ep}")
+        self.cache.rekey_for_mesh(new_ep)
+        return DroplessMoE(dataclasses.replace(self.dc, ep=new_ep),
+                           cache=self.cache)
+
     def step_stats(self) -> dict:
         """Cache counter deltas since this handle's previous call.
 
