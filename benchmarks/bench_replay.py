@@ -1,4 +1,5 @@
-"""Decode-trace replay smoke — bounded ragged-EP retraces under bucketing.
+"""Decode-trace replay smoke — bounded ragged-EP retraces under bucketing,
+plus the online-tuning and admission-control regression gates.
 
 Drives ``repro.launch.replay`` end-to-end at CI scale: churned decode
 traces (stationary ``uniform`` plus the batch-size-bursting ``bursty``
@@ -10,13 +11,31 @@ caps collapse onto the policy's rungs — on a stationary profile the
 fitted ladder's distinct cap tuples stay within its rung count (+1 for
 the cold start), and even under batch-size bursts the retrace count stays
 far below step count.
+
+Two serving gates ride on top (``launch/online.py``):
+
+* **Online vs offline under churn** — traffic whose volume doubles
+  mid-trace (t_loc 48 → 96). The offline ``fitted`` ladder was sized for
+  the pre-churn regime; the warm-started online tuner must match or beat
+  its hit rate on at least 2 of 3 profiles, keep mean pad no worse than
+  ``linear:16``, and hold simulated p99 step latency within 10% of the
+  offline policy's.
+* **Admission under burst** — predictor-priced token-level serving of the
+  ``bursty`` profile: with the gate armed (SLO at half the unbounded p99),
+  shed must be nonzero and *reported*, active tokens bounded by the sized
+  batch, and p99 at or under the SLO — strictly below the unbounded
+  baseline's.
 """
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro.core.buckets import BucketSpec, fit_ladder
-from repro.launch.replay import exact_plans, replay_trace, synth_trace
-from repro.models.moe import MoEConfig
+from repro.launch.online import AdmissionConfig, replay_admission, size_slots
+from repro.launch.replay import (exact_plans, replay_trace,
+                                 resolve_policies, synth_trace)
+from repro.models.moe import MoEConfig, routed_counts
 
 from .common import emit
 
@@ -61,6 +80,89 @@ def run() -> None:
             assert fit_row["ep_retraces"] <= n_rungs + 1, (
                 f"{profile}: stationary-profile retraces must stay within "
                 f"the ladder ({fit_row['ep_retraces']} > {n_rungs} + 1)")
+
+    run_online_gate()
+    run_admission_gate()
+
+
+def run_online_gate() -> None:
+    """Online refitting must pay for itself when traffic churns.
+
+    The replayed trace doubles its per-rank token volume mid-stream
+    (t_loc 48 → 96) while the offline fit only ever saw the pre-churn
+    regime — the deploy-then-drift scenario online tuning exists for.
+    ``online:6`` warm-starts from the *identical* ladder ``fitted:6``
+    deploys (resolve_policies guarantees this), so any hit-rate delta is
+    attributable to refitting alone.
+    """
+    wins, pad_onl, pad_l16 = 0, [], []
+    for profile in ("zipf", "hotspot", "bursty"):
+        pre = synth_trace(profile, 32, ep=EP, e_loc=E_LOC, t_loc=T_LOC,
+                          top_k=TOP_K, seed=0)
+        post = synth_trace(profile, 64, ep=EP, e_loc=E_LOC, t_loc=2 * T_LOC,
+                           top_k=TOP_K, seed=2)
+        fit = synth_trace(profile, 32, ep=EP, e_loc=E_LOC, t_loc=T_LOC,
+                          top_k=TOP_K, seed=1)
+        pols = resolve_policies(["linear:16", "fitted:6", "online:6"],
+                                fit, MC, EP)
+        rows = {r["policy"]: r for r in replay_trace(
+            pre + post, MC, EP, pols, d_model=D_MODEL, d_ff=D_FF,
+            simulate=True)}
+        onl, fit_row, l16 = (rows["online:6"], rows["fitted:6"],
+                             rows["linear:16"])
+        emit(f"replay_churn_{profile}_online", onl["fetch_us_mean"],
+             f"hit={onl['hit_rate']:.2f} (fitted={fit_row['hit_rate']:.2f}) "
+             f"pad={onl['pad_ratio']:.2f}x (lin16={l16['pad_ratio']:.2f}x) "
+             f"swaps={onl['swaps']} refits={onl['refits']} "
+             f"p99={onl['p99_us']:.1f}us (fitted={fit_row['p99_us']:.1f}us)")
+        wins += onl["hit_rate"] >= fit_row["hit_rate"]
+        pad_onl.append(onl["pad_ratio"])
+        pad_l16.append(l16["pad_ratio"])
+        assert onl["p99_us"] <= 1.10 * fit_row["p99_us"], (
+            f"{profile}: online p99 {onl['p99_us']:.2f}us regressed >10% "
+            f"over fitted {fit_row['p99_us']:.2f}us")
+    assert wins >= 2, (
+        f"online matched/beat the offline fit on only {wins}/3 churned "
+        f"profiles")
+    assert float(np.mean(pad_onl)) <= float(np.mean(pad_l16)), (
+        f"online mean pad {np.mean(pad_onl):.3f}x exceeds the static "
+        f"linear:16 ladder's {np.mean(pad_l16):.3f}x")
+
+
+def run_admission_gate() -> None:
+    """Admission control must buy its p99 with *reported* shed, not magic.
+
+    Bursty traffic, SLO pinned at half the unbounded baseline's p99 and a
+    batch budget sized from the same trace (``size_slots``). The gate must
+    (a) meet the SLO where the baseline misses it, strictly improving p99,
+    (b) never exceed the sized budget, and (c) account for every offered
+    token as served, shed, or still queued — shedding is visible load
+    management, never silent drop.
+    """
+    trace = synth_trace("bursty", 48, ep=EP, e_loc=E_LOC, t_loc=32,
+                        top_k=TOP_K, seed=0)
+    base = replay_admission(trace, MC, EP, d_model=D_MODEL, d_ff=D_FF)
+    slo = 0.5 * base["p99_us"]
+    pop = [routed_counts(ti, MC, EP) for ti in trace]
+    n = size_slots(pop, MC, EP, slo, d_model=D_MODEL, d_ff=D_FF)
+    gated = replay_admission(
+        trace, MC, EP, d_model=D_MODEL, d_ff=D_FF, n_slots=n,
+        admission=AdmissionConfig(slo_us=slo, max_queue=160))
+    emit("replay_admission_gated", gated["p99_us"],
+         f"slo={slo:.2f}us n_slots={n} shed={gated['shed']} "
+         f"served={gated['served']} deferred={gated['deferred']} "
+         f"max_active={gated['max_active']} base_p99={base['p99_us']:.2f}us "
+         f"miss={gated['slo_miss_rate']:.2f}")
+    offered = sum(np.asarray(t).reshape(-1, np.asarray(t).shape[-1]).shape[0]
+                  for t in trace)
+    assert gated["served"] + gated["shed"] + gated["deferred"] == offered, (
+        "token accounting leak: served+shed+deferred != offered")
+    assert gated["shed"] > 0, "bursty load at half-p99 SLO must shed"
+    assert gated["max_active"] <= n, (
+        f"gate exceeded sized budget: {gated['max_active']} > {n}")
+    assert gated["p99_us"] <= slo < base["p99_us"], (
+        f"gated p99 {gated['p99_us']:.2f}us vs slo {slo:.2f}us vs "
+        f"baseline {base['p99_us']:.2f}us")
 
 
 if __name__ == "__main__":

@@ -558,6 +558,35 @@ def auto_pipeline(plan: Optional[RoutingPlan], cfg: ScheduleConfig,
     return choice.pipeline, choice.cfg
 
 
+@functools.lru_cache(maxsize=4096)
+def _plan_us(cfg: ScheduleConfig, direction: str, names: tuple,
+             cost: CostModel) -> float:
+    return predict_makespan_us(cfg, direction, names, cost)
+
+
+def predict_plan_us(plan: RoutingPlan, d_model: int, d_ff: int, *,
+                    direction: str = "forward", pipeline=("ratr",),
+                    cost: Optional[CostModel] = None,
+                    dtype_bytes: int = 2) -> float:
+    """Price one routing plan's step makespan — no compile, no selector grid.
+
+    The admission-control and batch-sizing entry point
+    (``launch/online.py``): a single :func:`predict_makespan_us` call at a
+    fixed pipeline, memoized on the plan's count matrix, cheap enough to sit
+    on the per-request serve path (the full :func:`select` grid prices every
+    candidate and is reserved for refit-time re-pricing). Same units and
+    same undershoot caveat as :func:`predict_makespan_us` — gate thresholds
+    (SLOs) must be expressed against this predictor, not wall clock.
+    """
+    cost = cost if cost is not None else CostModel(l2=False)
+    if cost.l2:
+        cost = dataclasses.replace(cost, l2=False)
+    cfg = ScheduleConfig(ep=plan.ep, e_loc=plan.e_loc, rows=0,
+                         d_model=d_model, d_ff=d_ff, dtype_bytes=dtype_bytes,
+                         gmm_split_mode="source_aligned", plan=plan)
+    return _plan_us(cfg, direction, tuple(pipeline), cost)
+
+
 def is_auto(pipeline) -> bool:
     """True when ``pipeline`` is the literal auto-selection request."""
     return isinstance(pipeline, str) and pipeline == AUTO

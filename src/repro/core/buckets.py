@@ -290,6 +290,15 @@ class BucketSpec:
         total = int(c.sum())
         return float(self.quantize(c).sum()) / total if total else 1.0
 
+    def pad_rows(self, counts) -> int:
+        """Absolute padded-row overhead for one count matrix (>= 0).
+
+        The padding term of the online tuner's swap criterion
+        (``launch/online.py``) — additive across a window where
+        :meth:`pad_ratio` is not."""
+        c = np.asarray(counts, dtype=np.int64)
+        return int(self.quantize(c).sum() - c.sum())
+
 
 def coarsens(coarse: BucketSpec, fine: BucketSpec,
              counts: Iterable[int]) -> bool:

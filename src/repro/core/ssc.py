@@ -201,6 +201,11 @@ class SSCCache:
         # rescaled — a fixed-mesh run).
         self.rekeyed = 0
         self.active_ep: Optional[int] = None
+        # Online-tuning bookkeeping: the bucket-spec key whose entries
+        # currently get LRU priority (None = no hot-swap ever happened).
+        # Stored untagged (no ("ep", n) suffix) — a swap applies to every
+        # mesh size's population of that policy.
+        self.active_bucket: Optional[tuple] = None
         # Padded-vs-exact row accounting (reported by bucketing consumers
         # via record_rows; the cache only ever sees bucketed plans, so it
         # cannot derive the exact rows itself).
@@ -348,6 +353,57 @@ class SSCCache:
         return {"entries": len(self._cache), "active": active,
                 "stale": len(self._cache) - active, "retagged": retagged}
 
+    # -- online bucket hot-swap (launch/online.py serving path) --------------
+
+    @staticmethod
+    def _untag_bucket_key(b) -> Optional[tuple]:
+        """A key's bucket field with any trailing ``("ep", n)`` tag removed
+        (the canonical policy identity, mesh-size independent)."""
+        if b is None:
+            return None
+        b = tuple(b)
+        if b and isinstance(b[-1], tuple) and len(b[-1]) == 2 \
+                and b[-1][0] == "ep":
+            return b[:-1]
+        return b
+
+    @classmethod
+    def _key_bucket(cls, k: tuple) -> Optional[tuple]:
+        """Untagged bucket policy a resident key was quantized with (fused
+        keys report their first layer's — layers share a policy today)."""
+        if k and k[0] == "fused":
+            layers = k[4]
+            return cls._untag_bucket_key(layers[0][8]) if layers else None
+        return cls._untag_bucket_key(k[8])
+
+    def rekey_for_bucket(self, spec) -> dict:
+        """Hot-swap the active bucket policy — re-key, never flush.
+
+        The serving-path twin of :meth:`rekey_for_mesh`: when the online
+        tuner (``launch/online.py``) swaps the serving ``BucketSpec``, the
+        incumbent policy's compiled schedules stay bit-correct (quantization
+        only shapes plan *counts*; padding rows are provably inert) and the
+        ladder may swap back, so nothing is invalidated. This method
+        (1) boosts the new policy's resident entries to the MRU end —
+        stale-policy entries bear the LRU eviction pressure first — and
+        (2) records ``active_bucket`` so ``info()`` reports occupancy per
+        policy. The new policy's population then fills through the normal
+        ``get_or_compile`` path (``cfg.bucket`` is part of the key, so
+        policies never alias even when two specs quantize one batch to the
+        same counts).
+
+        Returns ``{"entries", "active", "stale"}`` counts.
+        """
+        from .buckets import BucketSpec
+        bk = self._untag_bucket_key(BucketSpec.from_any(spec).key())
+        for k in [k for k in self._cache if self._key_bucket(k) == bk]:
+            self._cache.move_to_end(k)
+        self.active_bucket = bk
+        self.rekeyed += 1
+        active = sum(1 for k in self._cache if self._key_bucket(k) == bk)
+        return {"entries": len(self._cache), "active": active,
+                "stale": len(self._cache) - active}
+
     def get_or_compile_fused(self, cfgs, direction: str, pipeline=None,
                              pipelines=None,
                              fused_pipeline=("fuse_boundary",),
@@ -426,9 +482,16 @@ class SSCCache:
             "evictions": self.evictions,
             "rekeyed": self.rekeyed,
             "active_ep": self.active_ep,
+            "active_bucket": self.active_bucket,
             "by_ep": dict(sorted(
                 (ep, sum(1 for k in self._cache if self._key_ep(k) == ep))
                 for ep in {self._key_ep(k) for k in self._cache})),
+            "by_bucket": {
+                str(b): n for b, n in sorted(
+                    ((b, sum(1 for k in self._cache
+                             if self._key_bucket(k) == b))
+                     for b in {self._key_bucket(k) for k in self._cache}),
+                    key=lambda kv: str(kv[0]))},
             "exact_rows": self.exact_rows,
             "padded_rows": self.padded_rows,
             "pad_ratio": self._pad_ratio(self.padded_rows, self.exact_rows),

@@ -260,8 +260,18 @@ def _exec_forward(dc: DroplessConfig, cache: SSCCache, mc,
     return y.reshape(T, d)
 
 
-def _make_impl(dc: DroplessConfig, cache: SSCCache):
-    """Build ``moe_impl(params, x, mc)`` executing plan-sized schedules."""
+def _make_impl(dc: DroplessConfig, cache: SSCCache, live=None):
+    """Build ``moe_impl(params, x, mc)`` executing plan-sized schedules.
+
+    ``live`` is the online-tuning seam (``launch/online.py``): a host-side
+    callable ``live(top_i, mc, direction) -> DroplessConfig`` invoked from
+    inside the pure_callback host functions on every step. The host fns run
+    per step even under a single jit trace, and the returned config may only
+    differ in fields that don't change traced shapes (the bucket spec, the
+    pipeline) — so the tuner can observe live routing and hot-swap the
+    quantization policy without retracing. ``None`` (the default, and the
+    whole training path) pins the construction-time ``dc``.
+    """
 
     def moe_impl(params, x, mc):
         from repro.models.moe import router_topk
@@ -278,42 +288,44 @@ def _make_impl(dc: DroplessConfig, cache: SSCCache):
 
         # ---- host callbacks ------------------------------------------------
         def fwd_host(xt_h, top_p_h, top_i_h, w_in_h, w_down_h):
+            dcc = live(np.asarray(top_i_h), mc, "forward") if live else dc
             w1 = np.asarray(w_in_h, np.float32).reshape(
-                dc.ep, mc.e_total // dc.ep, d, 2 * f)
+                dcc.ep, mc.e_total // dcc.ep, d, 2 * f)
             w2 = np.asarray(w_down_h, np.float32).reshape(
-                dc.ep, mc.e_total // dc.ep, f, d)
-            return _exec_forward(dc, cache, mc, xt_h, top_p_h, top_i_h,
+                dcc.ep, mc.e_total // dcc.ep, f, d)
+            return _exec_forward(dcc, cache, mc, xt_h, top_p_h, top_i_h,
                                  w1, w2)
 
         def bwd_host(xt_h, top_p_h, top_i_h, w_in_h, w_down_h, g_h):
             from repro.core import executor as ex
             from repro.models.moe import bridge_dispatch
 
+            dcc = live(np.asarray(top_i_h), mc, "backward") if live else dc
             xt_h = np.asarray(xt_h, np.float32)
             top_p_h = np.asarray(top_p_h, np.float32)
             top_i_h = np.asarray(top_i_h)
             g = np.asarray(g_h, np.float32)
-            e_loc = mc.e_total // dc.ep
-            w1 = np.asarray(w_in_h, np.float32).reshape(dc.ep, e_loc, d,
+            e_loc = mc.e_total // dcc.ep
+            w1 = np.asarray(w_in_h, np.float32).reshape(dcc.ep, e_loc, d,
                                                         2 * f)
-            w2 = np.asarray(w_down_h, np.float32).reshape(dc.ep, e_loc, f, d)
+            w2 = np.asarray(w_down_h, np.float32).reshape(dcc.ep, e_loc, f, d)
 
-            bridge = _bridge_of(dc, top_i_h, mc)
+            bridge = _bridge_of(dcc, top_i_h, mc)
             plan = bridge.plan
-            cfg = _schedule_cfg(dc, plan, d, f)
-            t_loc = T // dc.ep
+            cfg = _schedule_cfg(dcc, plan, d, f)
+            t_loc = T // dcc.ep
             rows = bridge.send_row                        # [ep, t_loc, k]
-            g3 = g.reshape(dc.ep, t_loc, d)
-            tp3 = top_p_h.reshape(dc.ep, t_loc, mc.top_k)
+            g3 = g.reshape(dcc.ep, t_loc, d)
+            tp3 = top_p_h.reshape(dcc.ep, t_loc, mc.top_k)
 
             # Recompute the saved activations the backward schedule consumes.
-            x_src = bridge_dispatch(bridge, xt_h.reshape(dc.ep, t_loc, d))
+            x_src = bridge_dispatch(bridge, xt_h.reshape(dcc.ep, t_loc, d))
             fwd = ex.reference_forward_plan(cfg, x_src, w1, w2)
 
             # Per-row cotangent entering the fragment: dy[row] = p · g_token.
             dy = [np.zeros((plan.send_rows(s), d), np.float32)
-                  for s in range(dc.ep)]
-            for s in range(dc.ep):
+                  for s in range(dcc.ep)]
+            for s in range(dcc.ep):
                 r = rows[s].reshape(-1)
                 valid = r >= 0
                 contrib = (tp3[s][:, :, None] * g3[s][:, None, :]).reshape(
@@ -321,14 +333,14 @@ def _make_impl(dc: DroplessConfig, cache: SSCCache):
                 np.add.at(dy[s], r[valid], contrib[valid])
 
             sched = cache.get_or_compile(cfg, "backward",
-                                         pipeline=dc.pipeline_spec())
+                                         pipeline=dcc.pipeline_spec())
             st = ex.ExecutorState(cfg)
             ex.load_backward_state_plan(cfg, st, fwd, w1, w2, dy)
             ex.execute(sched, st, rng=np.random.default_rng(0))
 
-            dxt = np.zeros((dc.ep, t_loc, d), np.float32)
-            dtp = np.zeros((dc.ep, t_loc, mc.top_k), np.float32)
-            for s in range(dc.ep):
+            dxt = np.zeros((dcc.ep, t_loc, d), np.float32)
+            dtp = np.zeros((dcc.ep, t_loc, mc.top_k), np.float32)
+            for s in range(dcc.ep):
                 if not plan.send_rows(s):
                     continue
                 dx_ret = st.get("dx_ret", s)
@@ -341,10 +353,10 @@ def _make_impl(dc: DroplessConfig, cache: SSCCache):
                         "td,td->t", g3[s, valid], y_ret[r[valid]])
             dw1 = np.stack([st.get("dW1", r) if plan.recv_rows(r)
                             else np.zeros((e_loc, d, 2 * f), np.float32)
-                            for r in range(dc.ep)])
+                            for r in range(dcc.ep)])
             dw2 = np.stack([st.get("dW2", r) if plan.recv_rows(r)
                             else np.zeros((e_loc, f, d), np.float32)
-                            for r in range(dc.ep)])
+                            for r in range(dcc.ep)])
             return (dxt.reshape(T, d), dtp.reshape(T, mc.top_k),
                     dw1.reshape(mc.e_total, d, 2 * f),
                     dw2.reshape(mc.e_total, f, d))

@@ -26,6 +26,18 @@ Traces are either synthesized (``--profile uniform|zipf|hotspot|bursty``)
 or recorded: the JSONL format is one object per decode step,
 ``{"step": i, "top_i": [[e, e], ...]}`` with ``top_i`` the step's [T, k]
 expert choices — exactly what a router tap in a serving loop would log.
+Each step object may additionally carry ``"t_us"``, the step's arrival
+timestamp in µs (monotone non-decreasing); absent ⇒ fixed cadence.
+Arrivals drive arrival-time-accurate SLO measurement: with ``--slo-us``
+set, replay runs a busy-server model (a step starts at
+``max(arrival, previous completion)``) and reports response-time
+percentiles and the SLO miss rate next to the raw step latencies.
+
+Policies are static :class:`~repro.core.buckets.BucketSpec` forms,
+``fitted:B[xL]`` (offline ladder fit on held-out data), or ``online[:B[xL]]``
+— a :class:`~repro.launch.online.OnlineTuner` starting cold and refitting
+on the replayed traffic itself (no held-out fit; the self-tuning serving
+path under test).
 
     PYTHONPATH=src python -m repro.launch.replay --profile bursty \
         --steps 64 --policies exact,linear:16,geometric:8,fitted:6
@@ -126,25 +138,64 @@ def synth_trace(profile: str, steps: int, *, ep: int = 4, e_loc: int = 2,
     return trace
 
 
-def save_trace_jsonl(path: str, trace: Sequence[np.ndarray]) -> None:
+def synth_arrival_us(trace: Sequence[np.ndarray], *,
+                     mean_gap_us: float = 500.0,
+                     seed: int = 0) -> np.ndarray:
+    """Per-step arrival timestamps consistent with a trace's batch sizes.
+
+    A bigger offered batch means the inter-arrival gap that accumulated it
+    was shorter, so gaps scale inversely with each step's token count
+    around ``mean_gap_us`` (± jitter) — bursty traces get clustered
+    arrivals, fixed-size traces an almost-fixed cadence. Monotone
+    non-decreasing µs, deterministic per seed.
+    """
+    rng = np.random.default_rng(seed)
+    tokens = np.asarray([np.asarray(t).reshape(-1, np.asarray(t).shape[-1])
+                         .shape[0] for t in trace], dtype=np.float64)
+    gaps = mean_gap_us * (tokens.mean() / np.maximum(tokens, 1.0))
+    gaps *= rng.uniform(0.8, 1.2, size=gaps.shape)
+    return np.cumsum(gaps)
+
+
+def save_trace_jsonl(path: str, trace: Sequence[np.ndarray],
+                     arrival_us: Optional[Sequence[float]] = None) -> None:
+    """Write the recorded-trace JSONL; ``arrival_us`` (optional, one per
+    step) adds the backward-compatible ``"t_us"`` timestamp field."""
+    if arrival_us is not None and len(arrival_us) != len(trace):
+        raise ValueError(
+            f"arrival_us has {len(arrival_us)} entries for "
+            f"{len(trace)} steps")
     with open(path, "w") as f:
         for i, top_i in enumerate(trace):
-            f.write(json.dumps({"step": i,
-                                "top_i": np.asarray(top_i).tolist()}) + "\n")
+            obj = {"step": i, "top_i": np.asarray(top_i).tolist()}
+            if arrival_us is not None:
+                obj["t_us"] = float(arrival_us[i])
+            f.write(json.dumps(obj) + "\n")
 
 
-def load_trace_jsonl(path: str) -> list[np.ndarray]:
-    trace = []
+def load_trace_jsonl(path: str, with_arrivals: bool = False):
+    """Load a recorded trace; default return is the plain step list.
+
+    ``with_arrivals=True`` returns ``(trace, arrival_us)`` where
+    ``arrival_us`` is a float64 array when *every* step carries ``t_us``
+    and ``None`` otherwise (absent ⇒ fixed cadence, the legacy format).
+    """
+    trace, arrivals = [], []
     with open(path) as f:
         for line in f:
             line = line.strip()
             if not line:
                 continue
-            trace.append(np.asarray(json.loads(line)["top_i"],
-                                    dtype=np.int64))
+            obj = json.loads(line)
+            trace.append(np.asarray(obj["top_i"], dtype=np.int64))
+            arrivals.append(obj.get("t_us"))
     if not trace:
         raise ValueError(f"{path}: empty trace")
-    return trace
+    if not with_arrivals:
+        return trace
+    arr = (np.asarray(arrivals, dtype=np.float64)
+           if all(a is not None for a in arrivals) else None)
+    return trace, arr
 
 
 # ---------------------------------------------------------------------------
@@ -159,27 +210,40 @@ def exact_plans(trace: Sequence[np.ndarray], mc, ep: int) -> list:
 
 
 def resolve_policies(specs: Sequence[str], fit_trace, mc,
-                     ep: int) -> dict[str, BucketSpec]:
-    """Map CLI policy names to specs.
+                     ep: int) -> dict:
+    """Map CLI policy names to specs (or online tuners).
 
     ``fitted:B`` fits a B-rung ladder on ``fit_trace`` (use a *different*
     seed/segment than the replayed trace, or the fit is evaluated
     in-sample); ``fitted:BxL`` additionally sets the fit's
     ``split_penalty`` to L (0 = padding-optimal, larger = reuse-favoring).
+    ``online[:B[xL]]`` builds an :class:`~repro.launch.online.OnlineTuner`
+    with that ladder budget / split penalty, *warm-started* from the same
+    offline fit ``fitted:B`` would deploy (the realistic rollout: ship the
+    deploy-time ladder, let the tuner take over) — comparing ``online:B``
+    against ``fitted:B`` on one trace therefore isolates exactly the value
+    of online refitting.
     """
+    from .online import OnlineConfig, OnlineTuner
     plans = None
-    out: dict[str, BucketSpec] = {}
+    out: dict = {}
     for s in specs:
         s = s.strip()
         if not s:
             continue
-        if s.startswith("fitted"):
+        if s.startswith("fitted") or s.startswith("online"):
             params = s.partition(":")[2] or "6"
             b, _, lam = params.partition("x")
             if plans is None:
                 plans = exact_plans(fit_trace, mc, ep)
-            out[s] = fit_ladder(plans, int(b),
-                                split_penalty=float(lam) if lam else 0.5)
+            seed_spec = fit_ladder(plans, int(b),
+                                   split_penalty=float(lam) if lam else 0.5)
+            if s.startswith("online"):
+                oc = OnlineConfig(budget=int(b), **(
+                    {"split_penalty": float(lam)} if lam else {}))
+                out[s] = OnlineTuner(initial=seed_spec, oc=oc)
+            else:
+                out[s] = seed_spec
         else:
             out[s] = BucketSpec.parse(s)
     if not out:
@@ -192,12 +256,14 @@ def resolve_policies(specs: Sequence[str], fit_trace, mc,
 # ---------------------------------------------------------------------------
 
 def replay_trace(trace: Sequence[np.ndarray], mc, ep: int,
-                 policies: dict[str, BucketSpec], *,
+                 policies: dict, *,
                  d_model: int = 64, d_ff: Optional[int] = None,
                  pipeline: Sequence = ("ratr",),
                  directions: Sequence[str] = ("forward",),
                  gmm_m_split: int = 1, simulate: bool = True,
-                 max_entries: int = 1024, quiet: bool = True) -> list[dict]:
+                 max_entries: int = 1024, quiet: bool = True,
+                 arrival_us: Optional[Sequence[float]] = None,
+                 slo_us: Optional[float] = None) -> list[dict]:
     """Replay one trace under each bucket policy; one result row per policy.
 
     Every step builds the policy's bucketed plan, fetches (or compiles) its
@@ -207,20 +273,42 @@ def replay_trace(trace: Sequence[np.ndarray], mc, ep: int,
     *distinct* schedules, exactly like the real system's compile cost).
     Decode replay prices ``("forward",)``; pass both directions for
     training-shaped traces.
+
+    A policy value may be an :class:`~repro.launch.online.OnlineTuner`
+    instead of a static spec: each step's exact routing counts are fed to
+    ``observe`` and the step is quantized with whatever spec the tuner
+    currently holds (its result row adds ``swaps``/``refits``).
+
+    ``arrival_us`` (with ``simulate``) adds arrival-time-accurate serving
+    latency under a busy-server model — step *i* starts at
+    ``max(arrival_us[i], completion[i-1])`` and its response time spans
+    arrival → completion — reported as ``p50_resp_us``/``p99_resp_us``
+    plus ``slo_miss_rate`` when ``slo_us`` is set.
     """
-    from repro.models.moe import plan_from_routing
+    from repro.models.moe import plan_from_routing, routed_counts
     from repro.parallel.ep import ring_chunk_caps
 
+    from .online import OnlineTuner
+
     d_ff = d_ff if d_ff is not None else mc.d_expert
+    if arrival_us is not None and len(arrival_us) != len(trace):
+        raise ValueError(f"arrival_us has {len(arrival_us)} entries for "
+                         f"{len(trace)} steps")
     rows_out = []
-    for name, spec in policies.items():
+    for name, pol in policies.items():
+        tuner = pol if isinstance(pol, OnlineTuner) else None
+        spec = None if tuner else pol
         cache = SSCCache(max_entries=max_entries)
+        if tuner is not None:
+            tuner.bind(cache=cache, d_model=d_model, d_ff=d_ff)
         sims: dict[tuple, float] = {}
         lat_us: list[float] = []
         fetch_s: list[float] = []
         ring_sigs: set[tuple] = set()
         for top_i in trace:
             t0 = time.perf_counter()
+            if tuner is not None:
+                spec = tuner.observe(routed_counts(top_i, mc, ep))
             bridge = plan_from_routing(top_i, mc, ep, capacity=None,
                                        bucket=spec)
             plan = bridge.plan
@@ -258,17 +346,33 @@ def replay_trace(trace: Sequence[np.ndarray], mc, ep: int,
             "ep_retraces": len(ring_sigs),
             "fetch_us_mean": 1e6 * float(np.mean(fetch_s)),
         }
+        if tuner is not None:
+            row["swaps"] = len(tuner.swaps)
+            row["refits"] = tuner.refits
         if simulate:
             row["p50_us"] = float(np.percentile(lat_us, 50))
             row["p99_us"] = float(np.percentile(lat_us, 99))
+            if arrival_us is not None:
+                resp, end = [], 0.0
+                for arr, us in zip(arrival_us, lat_us):
+                    end = max(float(arr), end) + us
+                    resp.append(end - float(arr))
+                row["p50_resp_us"] = float(np.percentile(resp, 50))
+                row["p99_resp_us"] = float(np.percentile(resp, 99))
+                if slo_us is not None:
+                    row["slo_miss_rate"] = float(
+                        (np.asarray(resp) > slo_us).mean())
         rows_out.append(row)
         if not quiet:
             sim = (f" p50={row['p50_us']:8.1f}us p99={row['p99_us']:8.1f}us"
                    if simulate else "")
+            if "p99_resp_us" in row:
+                sim += f" p99resp={row['p99_resp_us']:8.1f}us"
+            swaps = f" swaps={row['swaps']}" if tuner is not None else ""
             print(f"[replay {name:14s}] hit={row['hit_rate']:.2f} "
                   f"pad={row['pad_ratio']:.2f}x "
                   f"retraces={row['ep_retraces']:3d}/{len(trace)} "
-                  f"compiles={row['compiles']:3d}{sim} ({spec})")
+                  f"compiles={row['compiles']:3d}{sim}{swaps} ({spec})")
     return rows_out
 
 
@@ -309,6 +413,13 @@ def main(argv=None):
                          "forward,backward)")
     ap.add_argument("--no-sim", action="store_true",
                     help="skip the simulator (cache/retrace stats only)")
+    ap.add_argument("--arrival-gap-us", type=float, default=0.0,
+                    help="synthesize per-step arrival timestamps at this "
+                         "mean inter-step gap (0 = off); recorded traces "
+                         "with t_us fields carry their own arrivals")
+    ap.add_argument("--slo-us", type=float, default=None,
+                    help="response-time SLO bound (µs); with arrivals, "
+                         "rows gain slo_miss_rate")
     ap.add_argument("--report-out", default=None, metavar="JSONL",
                     help="write one result row per policy as JSONL")
     args = ap.parse_args(argv)
@@ -322,8 +433,10 @@ def main(argv=None):
 
     wants_fit = any(s.strip().startswith("fitted")
                     for s in args.policies.split(","))
+    arrivals = None
     if args.trace_in:
-        trace = load_trace_jsonl(args.trace_in)
+        trace, arrivals = load_trace_jsonl(args.trace_in,
+                                           with_arrivals=True)
         if wants_fit:
             # A recorded trace has no second seed to draw from: fit on the
             # first half and replay *only* the held-out second half (for
@@ -335,6 +448,8 @@ def main(argv=None):
                          "(fit half + held-out half)")
             split = len(trace) // 2
             fit_trace, trace = trace[:split], trace[split:]
+            if arrivals is not None:
+                arrivals = arrivals[split:]
             print(f"fitted policies: fit on steps [0, {split}), replaying "
                   f"held-out steps [{split}, {split + len(trace)})")
         else:
@@ -348,15 +463,19 @@ def main(argv=None):
                                 e_loc=e_loc, t_loc=args.t_loc,
                                 top_k=args.top_k, seed=args.seed + 1,
                                 churn=args.churn)
+    if arrivals is None and args.arrival_gap_us > 0:
+        arrivals = synth_arrival_us(trace, mean_gap_us=args.arrival_gap_us,
+                                    seed=args.seed)
     if args.trace_out:
-        save_trace_jsonl(args.trace_out, trace)
+        save_trace_jsonl(args.trace_out, trace, arrival_us=arrivals)
 
     policies = resolve_policies(args.policies.split(","), fit_trace, mc,
                                 args.ep)
     rows = replay_trace(
         trace, mc, args.ep, policies, d_model=args.d_model, d_ff=args.d_ff,
         directions=tuple(d for d in args.directions.split(",") if d),
-        simulate=not args.no_sim, quiet=False)
+        simulate=not args.no_sim, quiet=False,
+        arrival_us=arrivals, slo_us=args.slo_us)
     if args.report_out:
         with open(args.report_out, "w") as f:
             for row in rows:

@@ -220,6 +220,33 @@ def bucket_counts(counts: np.ndarray, bucket_rows=1) -> np.ndarray:
     return spec.quantize(counts)
 
 
+def routed_counts(top_i, mc: MoEConfig, ep: int) -> np.ndarray:
+    """Exact per-(src, dst, expert) row counts of one batch's routing.
+
+    The dropless-counts histogram of :func:`plan_from_routing` without
+    building the bridge — what the online tuner's rolling plan population
+    stores per served batch (``launch/online.py``). ``top_i`` as in
+    :func:`plan_from_routing`; returns int64 ``[ep, ep, e_loc]``.
+    """
+    ti = np.asarray(top_i)
+    if ti.ndim == 2:
+        T, k = ti.shape
+        if T % ep:
+            raise ValueError(f"T={T} tokens not divisible by ep={ep}")
+        ti = ti.reshape(ep, T // ep, k)
+    if ti.shape[0] != ep:
+        raise ValueError(f"leading dim {ti.shape[0]} != ep={ep}")
+    if mc.e_total % ep:
+        raise ValueError(f"e_total={mc.e_total} not divisible by ep={ep}")
+    e_loc = mc.e_total // ep
+    _, t_loc, k = ti.shape
+    flat = ti.reshape(-1).astype(np.int64)
+    src_idx = np.repeat(np.arange(ep, dtype=np.int64), t_loc * k)
+    counts = np.zeros((ep, ep, e_loc), dtype=np.int64)
+    np.add.at(counts, (src_idx, flat // e_loc, flat % e_loc), 1)
+    return counts
+
+
 def plan_from_routing(top_i, mc: MoEConfig, ep: int,
                       capacity: Optional[int] = None,
                       bucket_rows: int = 1, bucket=None) -> RoutingBridge:

@@ -3,3 +3,12 @@ import sys
 
 # Tests see the real device count (the dry-run alone forces 512 devices).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Serving jits the whole decode step *around* the dropless pure_callback
+# executor; under async CPU dispatch the callback's device-to-host operand
+# transfer can deadlock against the in-flight executable. The knob only
+# binds at CPU-client creation, so it must be set before any test touches
+# jax — hence here and not in the serving module's test.
+import jax
+
+jax.config.update("jax_cpu_enable_async_dispatch", False)

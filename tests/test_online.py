@@ -1,0 +1,320 @@
+"""Self-tuning SLO-aware serving: online refitting, hot-swap bit-parity,
+admission control, and replay-driven sizing.
+
+The online loop's contracts, in rough order of importance:
+
+* Hot swaps are **bit-transparent**: the bucket spec only changes how plan
+  cells pad, and padding rows are inert in the executor — so the same
+  inputs produce bit-identical outputs under any spec, including across a
+  forced mid-stream swap (executor-level and through the full serving
+  stack).
+* Refit/swap decisions are **pure functions of the observation window** —
+  two tuners fed the same counts agree exactly.
+* **Hysteresis** damps ladder thrash on oscillating traffic; greedy
+  (hysteresis=0) swaps at least as often as a margined tuner.
+* Swaps **re-key, never flush** the SSC cache.
+* The admission gate shed-reports (never silently drops), bounds active
+  tokens by the sized batch, and keeps predicted p99 under the SLO while
+  the unbounded baseline exceeds it — predictor-priced on both sides, so
+  the comparison is apples-to-apples.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.buckets import BucketSpec
+from repro.core.ssc import SSCCache
+from repro.launch.online import (AdmissionConfig, OnlineConfig, OnlineMoE,
+                                 OnlineTuner, population_plan,
+                                 replay_admission, size_capacity_factor,
+                                 size_slots)
+from repro.launch.replay import synth_trace
+from repro.models.moe import MoEConfig, init_moe, routed_counts
+
+from _proptest import given, settings, st
+
+EP, E_LOC, K = 4, 2, 2
+MC = MoEConfig(n_experts=EP * E_LOC, top_k=K, d_expert=16)
+
+
+def _counts(profile, steps, t_loc=32, seed=0):
+    return [routed_counts(ti, MC, EP) for ti in
+            synth_trace(profile, steps, ep=EP, e_loc=E_LOC, t_loc=t_loc,
+                        top_k=K, seed=seed)]
+
+
+# ---------------------------------------------------------------------------
+# Population derivation + sizing.
+# ---------------------------------------------------------------------------
+
+
+def test_population_plan_mean_union_and_rescale():
+    pop = _counts("zipf", 8)
+    plan = population_plan(pop)
+    c = np.asarray(plan.counts)
+    mean = np.mean(np.stack(pop), axis=0)
+    np.testing.assert_array_equal(c, np.ceil(mean).astype(np.int64))
+    # union sparsity: a cell is zero iff no batch ever touched it
+    touched = np.stack(pop).sum(axis=0) > 0
+    assert ((c > 0) == touched).all()
+    # rescale targets the requested row count (ceil keeps it >=)
+    small = population_plan(pop, total_rows=EP * K)
+    assert EP * K <= small.total_rows <= EP * K + c.size
+    with pytest.raises(ValueError):
+        population_plan([])
+    with pytest.raises(ValueError):
+        population_plan([np.zeros((EP, EP, E_LOC), np.int64)])
+
+
+def test_size_slots_monotone_and_capacity_factor():
+    pop = _counts("bursty", 24)
+    tight = size_slots(pop, MC, EP, 0.005, d_model=32, d_ff=16)
+    loose = size_slots(pop, MC, EP, 0.02, d_model=32, d_ff=16)
+    assert EP <= tight <= loose            # bigger SLO, bigger budget
+    assert tight % EP == 0 and loose % EP == 0
+    cf = size_capacity_factor(pop)
+    assert cf > 1.0                        # bursty traffic is skewed
+    assert size_capacity_factor(pop, headroom=2.0) > cf
+
+
+# ---------------------------------------------------------------------------
+# Refit determinism + hysteresis.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 50), st.sampled_from([0.0, 0.1, 0.3]))
+def test_refit_decisions_deterministic(seed, hyst):
+    rng = np.random.default_rng(seed)
+    window = []
+    for i in range(3):
+        prof = ["uniform", "zipf", "hotspot"][int(rng.integers(3))]
+        window += _counts(prof, 8, t_loc=int(rng.integers(16, 48)),
+                          seed=seed + i)
+    specs = [[], []]
+    tuners = [OnlineTuner(oc=OnlineConfig(hysteresis=hyst))
+              for _ in range(2)]
+    for t, out in zip(tuners, specs):
+        for c in window:
+            out.append(t.observe(c).key())
+    assert specs[0] == specs[1]
+    assert ([e["step"] for e in tuners[0].swaps]
+            == [e["step"] for e in tuners[1].swaps])
+    assert tuners[0].summary() == tuners[1].summary()
+
+
+def test_hysteresis_damps_ladder_thrash():
+    # Oscillating uniform <-> hotspot traffic: each 8-step block flips the
+    # window's fit. A greedy tuner chases it; margins damp it.
+    blocks = []
+    for i in range(8):
+        blocks += _counts("uniform" if i % 2 == 0 else "hotspot", 8,
+                          seed=i)
+    swaps = {}
+    for hyst in (0.0, 0.3):
+        t = OnlineTuner(initial="geometric:8",
+                        oc=OnlineConfig(hysteresis=hyst))
+        for c in blocks:
+            t.observe(c)
+        swaps[hyst] = len(t.swaps)
+        assert t.refits == len(blocks) // 8
+    assert swaps[0.0] >= 2                 # greedy: the ladder thrashes
+    assert swaps[0.3] <= 1                 # margined: it settles
+    assert swaps[0.3] < swaps[0.0]
+
+
+def test_swap_requires_margin_and_records_evidence():
+    t = OnlineTuner(initial="geometric:8",
+                    oc=OnlineConfig(hysteresis=0.1))
+    for c in _counts("hotspot", 16, seed=3):
+        t.observe(c)
+    if t.swaps:                             # refit won: evidence attached
+        ev = t.swaps[0]
+        assert ev["cand_cost"] < (1 - 0.1) * ev["inc_cost"]
+        assert ev["from"] == "geometric:8"
+    # forced swaps are evidence-free but still recorded
+    t.swap_to("linear:4", forced=True)
+    assert t.swaps[-1]["forced"] and t.spec == BucketSpec.linear(4)
+
+
+# ---------------------------------------------------------------------------
+# SSC re-key (never flush) across swaps.
+# ---------------------------------------------------------------------------
+
+
+def test_swap_rekeys_ssc_without_flushing():
+    d = 16
+    params = init_moe(jax.random.PRNGKey(0), d, MC)
+    cache = SSCCache(max_entries=64)
+    from repro.launch.dropless import DroplessConfig
+    tuner = OnlineTuner(initial="geometric:8",
+                        oc=OnlineConfig(refit_every=10_000))
+    om = OnlineMoE(DroplessConfig(ep=2, bucket="geometric:8",
+                                  pipeline=("ratr",)),
+                   tuner, cache=cache)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, d), jnp.float32)
+    om.impl(params, x, MC).block_until_ready()
+    before = cache.info()["entries"]
+    assert before > 0
+    om.swap_to("linear:4")
+    ev = tuner.swaps[-1]["rekey"]
+    assert ev["entries"] == before          # nothing evicted
+    assert ev["active"] == 0                # new policy starts cold
+    assert ev["stale"] == before
+    om.impl(params, x, MC).block_until_ready()
+    info = cache.info()
+    assert info["entries"] > before         # old blobs + new policy's
+    assert info["active_bucket"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap bit-parity: executor level, then through the serving stack.
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_bit_parity_executor():
+    from repro.launch.dropless import DroplessConfig
+    d = 16
+    params = init_moe(jax.random.PRNGKey(0), d, MC)
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (1, 16, d), jnp.float32)
+          for i in range(1, 4)]
+    frozen = OnlineConfig(refit_every=10_000)   # isolate forced swaps
+
+    def run(specs):
+        tuner = OnlineTuner(initial=specs[0], oc=frozen)
+        om = OnlineMoE(DroplessConfig(ep=2, bucket=specs[0],
+                                      pipeline=("ratr",)),
+                       tuner, cache=SSCCache(max_entries=64))
+        ys = []
+        for i, x in enumerate(xs):
+            if i < len(specs) and i > 0:
+                om.swap_to(specs[i])
+            ys.append(np.asarray(om.impl(params, x, MC)))
+        return ys
+
+    base = run(["geometric:8"])
+    other = run(["linear:4"])
+    swapped = run(["geometric:8", "linear:4", "exact"])
+    for a, b, c in zip(base, other, swapped):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+
+
+def test_hot_swap_bit_parity_through_serving_stack():
+    # Full continuous-batching decode on an MoE arch: a forced mid-serve
+    # ladder swap must not perturb a single served token.
+    from repro.configs import get_smoke_config
+    from repro.launch.dropless import DroplessConfig
+    from repro.launch.serve import ContinuousBatcher
+    from repro.models import model as M
+
+    cfg = dataclasses.replace(get_smoke_config("dbrx-132b"),
+                              dtype="float32", n_layers=2)
+    mc = cfg.moe
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = {i: rng.integers(0, cfg.vocab, 12) for i in range(4)}
+    max_new = 4
+
+    def serve(swap_at):
+        tuner = OnlineTuner(initial="geometric:8",
+                            oc=OnlineConfig(refit_every=10_000),
+                            d_model=cfg.d_model, d_ff=mc.d_expert)
+        om = OnlineMoE(DroplessConfig(ep=2, bucket=tuner.spec,
+                                      pipeline=("ratr",)),
+                       tuner, cache=SSCCache(max_entries=64))
+        b = ContinuousBatcher(cfg, params, n_slots=2,
+                              max_len=12 + max_new + 1, moe_impl=om.impl)
+        pending, finished, steps = list(prompts), [], 0
+        while pending or b.active.any() or b.instant_done:
+            while pending and b.admit(pending[0], prompts[pending[0]],
+                                      max_new):
+                pending.pop(0)
+            finished += b.step()
+            steps += 1
+            if steps == swap_at:
+                om.swap_to("linear:4")
+            assert steps < 200
+        assert sorted(finished) == sorted(prompts)
+        return b.generated, tuner
+
+    gen_plain, _ = serve(swap_at=None)
+    gen_swapped, tuner = serve(swap_at=2)
+    assert [e for e in tuner.swaps if e.get("forced")]
+    assert gen_plain == gen_swapped
+
+
+# ---------------------------------------------------------------------------
+# Admission control with load shedding (the bursty chaos case).
+# ---------------------------------------------------------------------------
+
+
+def test_admission_sheds_reported_and_meets_slo():
+    trace = synth_trace("bursty", 48, ep=EP, e_loc=E_LOC, t_loc=32,
+                        top_k=K, seed=0)
+    pop = [routed_counts(ti, MC, EP) for ti in trace]
+    slo = 0.01
+    n = size_slots(pop, MC, EP, slo, d_model=32, d_ff=16)
+    base = replay_admission(trace, MC, EP, d_model=32, d_ff=16)
+    gated = replay_admission(
+        trace, MC, EP, d_model=32, d_ff=16, n_slots=n,
+        admission=AdmissionConfig(slo_us=slo, max_queue=160))
+    offered = sum(np.asarray(t).reshape(-1, K).shape[0] for t in trace)
+    # nothing silently dropped: every offered token is accounted for
+    assert gated["served"] + gated["shed"] + gated["deferred"] == offered
+    assert gated["shed"] > 0
+    assert gated["max_active"] <= n
+    # predicted p99 under SLO with shedding; unbounded baseline over it
+    assert gated["p99_us"] <= slo < base["p99_us"]
+    assert gated["slo_miss_rate"] == 0.0
+    assert base["served"] == offered and base["shed"] == 0
+
+
+def test_admission_unbounded_wait_without_shedding():
+    trace = synth_trace("bursty", 24, ep=EP, e_loc=E_LOC, t_loc=32,
+                        top_k=K, seed=1)
+    gated = replay_admission(
+        trace, MC, EP, d_model=32, d_ff=16, n_slots=EP,
+        admission=AdmissionConfig(slo_us=0.005, max_queue=8, shed=False))
+    assert gated["shed"] == 0               # shedding off: queue grows
+    assert gated["deferred"] > 8
+    with pytest.raises(ValueError):
+        AdmissionConfig(slo_us=0.0)
+    with pytest.raises(ValueError):
+        replay_admission(trace, MC, EP,
+                         admission=AdmissionConfig(slo_us=1.0))
+
+
+# ---------------------------------------------------------------------------
+# Online policy inside the replay harness.
+# ---------------------------------------------------------------------------
+
+
+def test_online_policy_replays_deterministically():
+    from repro.launch.replay import replay_trace, resolve_policies
+    trace = (synth_trace("zipf", 16, ep=EP, e_loc=E_LOC, t_loc=24,
+                         top_k=K, seed=0)
+             + synth_trace("zipf", 16, ep=EP, e_loc=E_LOC, t_loc=48,
+                           top_k=K, seed=2))
+    fit = synth_trace("zipf", 8, ep=EP, e_loc=E_LOC, t_loc=24, top_k=K,
+                      seed=1)
+
+    def run():
+        pols = resolve_policies(["fitted:4", "online:4"], fit, MC, EP)
+        # online warm-starts from the very ladder fitted:4 deploys
+        assert pols["online:4"].spec.key() == pols["fitted:4"].key()
+        rows = {r["policy"]: r for r in replay_trace(
+            trace, MC, EP, policies=pols, d_model=32, d_ff=16,
+            simulate=False)}
+        return rows
+
+    r1, r2 = run(), run()
+    assert r1["online:4"]["hit_rate"] == r2["online:4"]["hit_rate"]
+    assert r1["online:4"]["swaps"] == r2["online:4"]["swaps"]
+    assert "swaps" not in r1["fitted:4"]
+    assert r1["online:4"]["refits"] > 0

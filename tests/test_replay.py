@@ -130,3 +130,45 @@ def test_replay_cli_end_to_end(tmp_path):
     lin = next(r for r in rows if r["policy"] == "linear:8")
     assert rows2[0]["hit_rate"] == lin["hit_rate"]
     assert rows2[0]["pad_ratio"] == pytest.approx(lin["pad_ratio"])
+
+
+def test_arrival_timestamps_roundtrip_and_backward_compat(tmp_path):
+    from repro.launch.replay import synth_arrival_us
+    tr = _trace("bursty", steps=10)
+    arr = synth_arrival_us(tr, mean_gap_us=100.0, seed=3)
+    assert len(arr) == len(tr)
+    assert (np.diff(arr) >= 0).all()        # monotone non-decreasing
+    np.testing.assert_array_equal(arr, synth_arrival_us(tr,
+                                                        mean_gap_us=100.0,
+                                                        seed=3))
+    path = str(tmp_path / "timed.jsonl")
+    save_trace_jsonl(path, tr, arrival_us=arr)
+    # legacy loader: plain step list, timestamps transparently ignored
+    plain = load_trace_jsonl(path)
+    assert all(np.array_equal(a, b) for a, b in zip(tr, plain))
+    back, arr2 = load_trace_jsonl(path, with_arrivals=True)
+    assert all(np.array_equal(a, b) for a, b in zip(tr, back))
+    np.testing.assert_allclose(arr2, arr)
+    # legacy file (no t_us): arrivals come back as None
+    legacy = str(tmp_path / "legacy.jsonl")
+    save_trace_jsonl(legacy, tr)
+    back, none_arr = load_trace_jsonl(legacy, with_arrivals=True)
+    assert none_arr is None and len(back) == len(tr)
+    with pytest.raises(ValueError):
+        save_trace_jsonl(path, tr, arrival_us=arr[:-1])
+
+
+def test_replay_arrivals_feed_response_latency_metrics():
+    from repro.launch.replay import synth_arrival_us
+    trace = _trace("bursty", steps=8)
+    arr = synth_arrival_us(trace, mean_gap_us=5.0, seed=0)
+    rows = replay_trace(trace, MC, EP,
+                        {"linear:8": BucketSpec.linear(8)},
+                        d_model=32, d_ff=16, simulate=True,
+                        arrival_us=arr, slo_us=50.0)
+    r = rows[0]
+    for key in ("p50_resp_us", "p99_resp_us", "slo_miss_rate"):
+        assert key in r, key
+    # queueing: response time is never below raw step latency
+    assert r["p99_resp_us"] >= r["p99_us"]
+    assert 0.0 <= r["slo_miss_rate"] <= 1.0

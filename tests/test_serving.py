@@ -49,3 +49,85 @@ def test_continuous_batching_matches_isolated():
         want = _isolated_generate(cfg, params, prompt, max_new)
         assert b.generated[rid] == want, (
             rid, b.generated[rid], want)
+
+
+def test_admit_when_full_and_finish_then_refill():
+    cfg = dataclasses.replace(get_smoke_config("qwen2-1.5b"),
+                              dtype="float32", n_layers=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = {i: rng.integers(0, cfg.vocab, 10) for i in range(3)}
+    b = ContinuousBatcher(cfg, params, n_slots=2, max_len=10 + 3 + 1)
+
+    assert b.admit(0, prompts[0], 2) and b.admit(1, prompts[1], 2)
+    assert not b.admit(2, prompts[2], 2)        # full: admit refuses
+    assert b.offer(2, prompts[2], 2) == "defer"  # ungated offer defers
+    assert b.deferred == 1 and 2 not in b.generated
+
+    done = b.step()                              # both finish together
+    assert sorted(done) == [0, 1]
+    assert not b.active.any()
+
+    # immediate refill lands in a clean slot: the refilled request decodes
+    # exactly like an isolated run (scatter overwrote every cache leaf)
+    assert b.admit(2, prompts[2], 3)
+    out = []
+    while b.active.any():
+        out += b.step()
+    assert out == [2]
+    assert b.generated[2] == _isolated_generate(cfg, params, prompts[2], 3)
+
+
+def test_scatter_slot_leaf_shape_dispatch():
+    # n_slots == prompt cache depth exercises the [L, B, ...] vs [B, ...]
+    # collision the batch-1 marker dispatch exists for.
+    cfg = dataclasses.replace(get_smoke_config("qwen2-1.5b"),
+                              dtype="float32", n_layers=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b = ContinuousBatcher(cfg, params, n_slots=2, max_len=16)
+    prompt = np.arange(8) % cfg.vocab
+    _, cache1 = b._prefill1(b.params,
+                            jnp.asarray(prompt[None, :], jnp.int32))
+    before = jax.tree.map(lambda a: np.asarray(a).copy(), b.cache)
+    b._scatter_slot(1, cache1)
+
+    def check(path_c, c1, before_leaf, after_leaf):
+        after = np.asarray(after_leaf)
+        b4 = np.asarray(before_leaf)
+        c1 = np.asarray(c1)
+        if b4.ndim == 0:
+            return
+        if b4.ndim == c1.ndim + 1:           # per-slot len [L, B]
+            np.testing.assert_array_equal(after[:, 0], b4[:, 0])
+            np.testing.assert_array_equal(after[:, 1], c1)
+        elif c1.ndim >= 2 and c1.shape[1] == 1 \
+                and b4.shape[0] == c1.shape[0]:   # stacked [L, B, ...]
+            np.testing.assert_array_equal(after[:, 0], b4[:, 0])
+            np.testing.assert_array_equal(after[:, 1], c1[:, 0])
+        else:                                 # unstacked [B, ...]
+            np.testing.assert_array_equal(after[0], b4[0])
+            np.testing.assert_array_equal(after[1], c1[0])
+
+    jax.tree.map(lambda b4, c1, af: check(None, c1, b4, af),
+                 before, cache1, b.cache)
+
+
+def test_zero_budget_request_generates_exactly_one_token():
+    cfg = dataclasses.replace(get_smoke_config("qwen2-1.5b"),
+                              dtype="float32", n_layers=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, 10)
+    b = ContinuousBatcher(cfg, params, n_slots=1, max_len=16)
+    assert b.admit(7, prompt, 1)
+    assert not b.active.any()               # no slot occupied
+    assert b.step() == [7]                  # drained as finished
+    assert b.generated[7] == _isolated_generate(cfg, params, prompt, 1)
+    # max_new=1 admits even when every slot is busy (prefill-only)
+    assert b.admit(8, prompt, 2)
+    assert b.admit(9, prompt, 1)
+    done = []
+    while b.active.any() or b.instant_done:
+        done += b.step()
+    assert sorted(done) == [8, 9]
+    assert len(b.generated[9]) == 1
