@@ -21,11 +21,21 @@ fails (CI regression gate for the fusion passes).
 
 Per-layer standalone d2c (which gets the inter-layer remap for free —
 the host-bridge execution model) is emitted as context, not gated.
+
+The PP section compiles the same three skew scenarios as a 1F1B-
+interleaved pipeline (``compile_pp_fused``, ep=8, pp ∈ {2, 4}, per-device
+shape ratios matching a Megatron tp2pp4ep4 slice) and simulates fused vs
+``stage_barrier=True`` — the fair per-stage reference where cell (s, m)
+waits for both (s-1, m) and (s, m-1) to fully drain. Gated the same way:
+fused must strictly beat the barrier on dispatch-to-combine or makespan
+on at least two of three scenarios per pipeline depth, and ``select_pp``
+must never predict fused worse than per-stage.
 """
 
 from __future__ import annotations
 
-from repro.core.fusion import compile_fused
+from repro.core.autoselect import select_pp
+from repro.core.fusion import compile_fused, compile_pp_fused
 from repro.core.hardware import AscendA3
 from repro.core.odg import ScheduleConfig, build_moe_ffn_forward
 from repro.core.routing import hotspot_plan, skewed_plan
@@ -40,6 +50,14 @@ M_SPLIT = 64
 PIPELINE = ["ratr", "critical_rank_first"]
 WINS_REQUIRED = 2
 
+# PP scenario: per-device slice of a Megatron tp2pp4ep4 run — d_model and
+# d_ff/tp in their ~1.75 ratio (14336 / 4096 / 2tp), modest rows and
+# m_split so the S x M cell grid stays simulation-sized.
+PP_D_MODEL, PP_D_FF = 1024, 1792
+PP_ROWS, PP_M_SPLIT = 64, 32
+PP_MICROBATCHES = 4
+PP_STAGES = (2, 4)
+
 
 def _cases():
     yield "uniform", skewed_plan(EP, E_LOC, ROWS, 0.0)
@@ -51,6 +69,57 @@ def _cfg(plan) -> ScheduleConfig:
     return ScheduleConfig(ep=EP, e_loc=E_LOC, rows=0, d_model=D_MODEL,
                           d_ff=D_FF, gmm_m_split=M_SPLIT,
                           gmm_split_mode="source_aligned", plan=plan)
+
+
+def _pp_cfg(plan) -> ScheduleConfig:
+    return ScheduleConfig(ep=EP, e_loc=E_LOC, rows=0, d_model=PP_D_MODEL,
+                          d_ff=PP_D_FF, gmm_m_split=PP_M_SPLIT,
+                          gmm_split_mode="source_aligned", plan=plan)
+
+
+def _pp_cases():
+    yield "uniform", skewed_plan(EP, E_LOC, PP_ROWS, 0.0)
+    yield "zipf", skewed_plan(EP, E_LOC, PP_ROWS, 1.2)
+    yield "hotspot", hotspot_plan(EP, E_LOC, PP_ROWS, background=8)
+
+
+def run_pp(hw: AscendA3 = AscendA3()) -> None:
+    for S in PP_STAGES:
+        wins = 0
+        for name, plan in _pp_cases():
+            cfg = _pp_cfg(plan)
+            fs = compile_pp_fused([cfg] * S, PP_MICROBATCHES,
+                                  pipeline=PIPELINE)
+            fsim = simulate_unified(fs, hw)
+            ssim = simulate_unified(fs, hw, stage_barrier=True)
+            won = (fsim.dispatch_to_combine_us < ssim.dispatch_to_combine_us
+                   or fsim.makespan_us < ssim.makespan_us)
+            wins += won
+            win_pct = ((ssim.makespan_us - fsim.makespan_us)
+                       / max(1e-9, ssim.makespan_us) * 100)
+            emit(f"pp{S}_{name}_fused", fsim.makespan_us,
+                 f"win={win_pct:+.2f}% d2c={fsim.dispatch_to_combine_us:.1f}"
+                 f"us cells={S}x{PP_MICROBATCHES} "
+                 f"stage_comm={fsim.phase_us.get('stage', 0.0):.1f}us")
+            emit(f"pp{S}_{name}_stage_barrier", ssim.makespan_us,
+                 f"barrier=stage d2c={ssim.dispatch_to_combine_us:.1f}us "
+                 f"plan_skew={plan.expert_imbalance():.2f}x")
+            ch = select_pp([cfg] * S, PP_MICROBATCHES)
+            if ch.predicted_fused_us > ch.predicted_per_stage_us + 1e-9:
+                raise RuntimeError(
+                    f"select_pp predicted fused worse than per-stage at "
+                    f"pp={S} scenario={name}: {ch.predicted_fused_us:.1f}us"
+                    f" > {ch.predicted_per_stage_us:.1f}us")
+            emit(f"pp{S}_{name}_selector_fused_pred", ch.predicted_fused_us,
+                 f"per_stage_pred={ch.predicted_per_stage_us:.1f}us "
+                 f"bubble={ch.bubble_us:.1f}us fuse={ch.fuse}")
+        emit(f"pp{S}_scenario_wins", float(wins),
+             f"required>={WINS_REQUIRED}of3")
+        if wins < WINS_REQUIRED:
+            raise RuntimeError(
+                f"PP-fused schedule beat the stage-barrier reference on "
+                f"only {wins}/3 scenarios at pp={S} "
+                f"(need >= {WINS_REQUIRED})")
 
 
 def run(hw: AscendA3 = AscendA3()) -> None:
@@ -82,6 +151,7 @@ def run(hw: AscendA3 = AscendA3()) -> None:
         raise RuntimeError(
             f"fused schedule beat the fragment-barrier reference on only "
             f"{wins}/3 scenarios (need >= {WINS_REQUIRED})")
+    run_pp(hw)
 
 
 if __name__ == "__main__":

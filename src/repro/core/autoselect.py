@@ -587,6 +587,192 @@ def predict_plan_us(plan: RoutingPlan, d_model: int, d_ff: int, *,
     return _plan_us(cfg, direction, tuple(pipeline), cost)
 
 
+# ---------------------------------------------------------------------------
+# Multi-fragment selection — fused-vs-per-layer (cross-layer fusion) and
+# fused-vs-per-stage (pipeline-parallel fusion). Both reuse the per-layer
+# selector verbatim for the intra-fragment terms and only price what fusion
+# changes: how fragments are *joined*.
+# ---------------------------------------------------------------------------
+
+def _boundary_remap_us(up_cfg: ScheduleConfig, dn_cfg: ScheduleConfig,
+                       cost: CostModel) -> float:
+    """One junction's in-taskflow LayerBoundary cost: the slowest rank's
+    remap stream (upstream return read + downstream send write) spread over
+    its AIV pool — the same bytes the boundary tiles carry."""
+    hw = cost.hw
+    b_in = up_cfg.d_model * up_cfg.dtype_bytes
+    b_out = dn_cfg.d_model * dn_cfg.dtype_bytes
+    per = [dn_cfg.routing.send_rows(r) * (b_in + b_out)
+           / (hw.aiv_gbps * 1e3) for r in range(dn_cfg.ep)]
+    return (max(per) if per else 0.0) / max(1, hw.num_aiv)
+
+
+def _host_bridge_us(up_cfg: ScheduleConfig, dn_cfg: ScheduleConfig,
+                    cost: CostModel) -> float:
+    """One junction's per-layer alternative: drain to host between layers.
+
+    The unfused path pays a host synchronization (the launch gap between
+    layer N's combine and layer N+1's dispatch — same constant the
+    baseline simulator charges per collective) plus two streaming passes
+    over the token activations at HBM bandwidth: the upstream
+    combine-weighted gather, then the downstream dispatch scatter."""
+    hw = cost.hw
+    b_in = up_cfg.d_model * up_cfg.dtype_bytes
+    b_out = dn_cfg.d_model * dn_cfg.dtype_bytes
+    per = [2 * (up_cfg.routing.send_rows(r) * b_in
+                + dn_cfg.routing.send_rows(r) * b_out)
+           / (hw.hbm_gbps * 1e3) for r in range(dn_cfg.ep)]
+    return hw.collective_host_us + (max(per) if per else 0.0)
+
+
+def _stage_link_us(up_cfg: ScheduleConfig, dn_cfg: ScheduleConfig,
+                   cost: CostModel) -> float:
+    """One microbatch's StageBoundary handoff at a junction: the slowest
+    rank's activation payload over the stage link — the same per-link-class
+    formula :meth:`CostModel.task_us` prices a StageBoundary tile with."""
+    hw = cost.hw
+    row_b = dn_cfg.d_model * dn_cfg.dtype_bytes
+    topo = cost.topology if cost.topology is not None else dn_cfg.topology
+    if topo is not None:
+        lat, bw = topo.latency_us("inter"), topo.bw_gbps("inter") * 1e3
+    else:
+        lat, bw = hw.hop_latency_us, hw.link_gbps * 1e3
+    per = [lat + dn_cfg.routing.send_rows(r) * row_b / bw
+           for r in range(dn_cfg.ep)]
+    return max(per) if per else 0.0
+
+
+def _stage_decomp(cfg: ScheduleConfig, direction: str,
+                  cost: CostModel) -> tuple[float, float]:
+    """(compute-bound, comm-bound) per-stage slot times — the two resources
+    a fused steady-state cell can hide behind each other."""
+    hw = cost.hw
+    plan = cfg.routing
+    cube = cost.rank_cube_us(cube_taskset(plan, cfg, direction))
+    link, vec = _comm_vec_us(plan, cfg, direction, cost)
+    if cfg.topology is not None:
+        link = _comm_topo_us(plan, cfg, cost)
+    comp = max((max(cube[r] / hw.num_aic, vec[r] / hw.num_aiv)
+                for r in range(plan.ep)), default=0.0)
+    comm = float(np.max(link)) if np.size(link) else 0.0
+    return comp, comm
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedChoice:
+    """Fused-vs-per-layer verdict for a layer stack (satellite of PR 6's
+    ROADMAP leftover): both sides share the per-layer selector's best
+    intra-layer estimates and differ only in the junction cost — the
+    in-taskflow boundary remap vs the host round-trip."""
+
+    fuse: bool
+    predicted_fused_us: float
+    predicted_per_layer_us: float
+    choices: tuple[AutoChoice, ...]      # per layer, layer order
+
+
+@functools.lru_cache(maxsize=256)
+def _select_fused(cfgs: tuple, direction: str, allow_retile: bool,
+                  cost: CostModel) -> FusedChoice:
+    choices = tuple(_select(c, direction, allow_retile, cost) for c in cfgs)
+    intra = sum(ch.predicted_us for ch in choices)
+    juncs = list(zip(cfgs[:-1], cfgs[1:]))
+    if direction == "backward":          # gradients flow top layer down
+        juncs = [(dn, up) for (up, dn) in juncs]
+    fused = intra + sum(_boundary_remap_us(u, d, cost) for u, d in juncs)
+    per_layer = intra + sum(_host_bridge_us(u, d, cost) for u, d in juncs)
+    return FusedChoice(fuse=fused <= per_layer, predicted_fused_us=fused,
+                       predicted_per_layer_us=per_layer, choices=choices)
+
+
+def select_fused(cfgs, *, direction: str = "forward",
+                 cost_model: Optional[CostModel] = None,
+                 allow_retile: bool = True) -> FusedChoice:
+    """Price fused-vs-per-layer for a stack of layer configs (layer order),
+    so ``pipeline="auto"`` / ``fuse="auto"`` can choose per batch."""
+    cost = cost_model if cost_model is not None else CostModel(l2=False)
+    if cost.l2:
+        cost = dataclasses.replace(cost, l2=False)
+    if direction not in ("forward", "backward"):
+        raise ValueError(f"unknown direction {direction!r}")
+    return _select_fused(tuple(cfgs), direction, allow_retile, cost)
+
+
+@dataclasses.dataclass(frozen=True)
+class PPChoice:
+    """PP fused-vs-per-stage verdict.
+
+    Both estimates share the fill/drain ramp (every stage runs microbatch
+    0 in sequence, boundary handoffs included) and differ in the
+    steady-state slot: the per-stage reference pays the bottleneck stage's
+    *serial* (intra-stage estimate + incoming handoff) per microbatch,
+    while the fused schedule hides comm behind compute within a slot —
+    ``max(compute, comm + handoff)`` — clamped at the per-stage slot, so
+    the fused estimate is never worse by construction (overlap can only
+    remove waiting, never add work; the gate asserts this stays true).
+    """
+
+    fuse: bool
+    n_stages: int
+    n_microbatches: int
+    predicted_fused_us: float
+    predicted_per_stage_us: float
+    bubble_us: float                     # (S-1) x bottleneck compute slot
+    choices: tuple[AutoChoice, ...]      # per stage, stage order
+
+
+@functools.lru_cache(maxsize=256)
+def _select_pp(cfgs: tuple, n_microbatches: int, direction: str,
+               allow_retile: bool, cost: CostModel) -> PPChoice:
+    S, M = len(cfgs), n_microbatches
+    choices = tuple(_select(c, direction, allow_retile, cost) for c in cfgs)
+    pred = [ch.predicted_us for ch in choices]
+    decomp = [_stage_decomp(ch.cfg, direction, cost) for ch in choices]
+    # Incoming handoff per stage in this direction's dataflow: forward
+    # stage s receives from s-1, backward from s+1.
+    bnd_in = [0.0] * S
+    if direction == "forward":
+        for s in range(1, S):
+            bnd_in[s] = _stage_link_us(cfgs[s - 1], cfgs[s], cost)
+    else:
+        for s in range(S - 1):
+            bnd_in[s] = _stage_link_us(cfgs[s + 1], cfgs[s], cost)
+    fill = sum(pred) + sum(bnd_in)
+    per_slot = max(pred[s] + bnd_in[s] for s in range(S))
+    fused_slot = max(min(max(decomp[s][0], decomp[s][1] + bnd_in[s]),
+                         pred[s] + bnd_in[s]) for s in range(S))
+    per_stage = fill + (M - 1) * per_slot
+    fused = fill + (M - 1) * fused_slot
+    bubble = (S - 1) * max(d[0] for d in decomp)
+    return PPChoice(fuse=fused <= per_stage, n_stages=S, n_microbatches=M,
+                    predicted_fused_us=fused,
+                    predicted_per_stage_us=per_stage,
+                    bubble_us=bubble, choices=choices)
+
+
+def select_pp(cfgs, n_microbatches: int, *, direction: str = "forward",
+              cost_model: Optional[CostModel] = None,
+              allow_retile: bool = True) -> PPChoice:
+    """Price PP fused-vs-per-stage for per-stage configs (stage order).
+
+    This is how ``pipeline="auto"`` picks the winner per plan tuple before
+    committing to ``compile_pp_fused``: the per-stage intra estimates come
+    from the same memoized :func:`select` grid the unfused path resolves
+    with, so a fused pick never contradicts the per-stage picks it is
+    built from.
+    """
+    if n_microbatches < 1:
+        raise ValueError(f"n_microbatches must be >= 1, "
+                         f"got {n_microbatches}")
+    cost = cost_model if cost_model is not None else CostModel(l2=False)
+    if cost.l2:
+        cost = dataclasses.replace(cost, l2=False)
+    if direction not in ("forward", "backward"):
+        raise ValueError(f"unknown direction {direction!r}")
+    return _select_pp(tuple(cfgs), int(n_microbatches), direction,
+                      allow_retile, cost)
+
+
 def is_auto(pipeline) -> bool:
     """True when ``pipeline`` is the literal auto-selection request."""
     return isinstance(pipeline, str) and pipeline == AUTO

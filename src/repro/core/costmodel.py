@@ -56,7 +56,12 @@ class CostModel:
     def link_class_of(self, td) -> str:
         """Link class of a put task: local / intra / inter, or the flat
         ``"link"`` when no topology is attached (incl. multi-dst fallback
-        tasks, whose destinations are unknown)."""
+        tasks, whose destinations are unknown). ``StageBoundary`` tiles
+        always ride the pipeline-stage link — the topology's inter-node
+        class — regardless of rank indices (the downstream stage is a
+        different device that happens to share the EP rank index)."""
+        if td.task_type == "StageBoundary":
+            return "inter" if self.topology is not None else "link"
         if td.dst_rank == td.src_rank:
             return "local"
         if self.topology is None or td.dst_rank < 0:
@@ -93,6 +98,18 @@ class CostModel:
                         + td.comm_bytes / (hw.link_gbps * 1e3))
             topo = self.topology
             return (t + topo.latency_us(cls)
+                    + td.comm_bytes / (topo.bw_gbps(cls) * 1e3))
+        if td.task_type == "StageBoundary":
+            # PP activation handoff: the payload crosses the stage link.
+            # No L2 term — the tile is link-bound, not bandwidth-from-HBM
+            # bound, and no ``local`` case: the downstream stage is always
+            # a different device.
+            cls = self.link_class_of(td)
+            if cls == "link":
+                return (hw.hop_latency_us
+                        + td.comm_bytes / (hw.link_gbps * 1e3))
+            topo = self.topology
+            return (topo.latency_us(cls)
                     + td.comm_bytes / (topo.bw_gbps(cls) * 1e3))
         if td.queue_type == CTQ:
             # Per-tile GMM efficiency depends on operand L2 residency — the
@@ -153,6 +170,37 @@ class CostModel:
                 loads[f][td.rank] += self.task_us(td)
         return {f: {r: loads[f].get(r, 0.0) for r in range(sched.ep)}
                 for f in sorted(frags)}
+
+    def pp_bubble_us(self, sched) -> float:
+        """Compile-time 1F1B bubble estimate of a PP-fused schedule.
+
+        The warm-up + cool-down idle of a synchronous pipeline is
+        ``(n_stages - 1)`` slots of the bottleneck cell's pool-bound time —
+        exactly the gap StageBoundary handoffs and EP dispatch/combine can
+        be absorbed into. Cells are identified by ``pp_stage`` /
+        ``pp_microbatch`` task metadata; returns 0.0 for schedules without
+        it. Pool-bound: a cell's cube work spreads over ``num_aic`` cores
+        and its vector work over ``num_aiv``, so the slot time is the
+        slower pool, not the serial task sum.
+        """
+        cells: dict[tuple[int, int], list[float]] = defaultdict(
+            lambda: [0.0, 0.0])
+        for td in sched.tasks:
+            s = td.meta.get("pp_stage")
+            if s is None:
+                continue
+            c = cells[(s, td.meta.get("pp_microbatch", 0))]
+            if td.queue_type == CTQ:
+                c[0] += self.task_us(td)
+            elif td.task_type not in ("put_mem_signal", "StageBoundary"):
+                c[1] += self.task_us(td)
+        if not cells:
+            return 0.0
+        hw = self.hw
+        n_stages = len({s for (s, _) in cells})
+        slot = max(max(cube / hw.num_aic, vec / hw.num_aiv)
+                   for cube, vec in cells.values())
+        return (n_stages - 1) * slot
 
     def fragment_critical_ranks(self, sched) -> dict[int, tuple[float, int]]:
         """Per-fragment (straggler ratio, critical rank) — each fused

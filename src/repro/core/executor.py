@@ -248,6 +248,11 @@ HANDLERS: dict[str, Callable[[TaskDescriptor, ExecutorState], None]] = {
     "SwiGLU": _h_swiglu,
     "SwiGLUGrad": _h_swiglu_grad,
     "LayerBoundary": _h_layer_boundary,
+    # The PP stage handoff computes the same junction remap (upstream
+    # combine composed with downstream routing) — only its *scheduling*
+    # and pricing differ (activation payload over the stage link), so it
+    # shares the handler; junctions key ``boundary_fns`` the same way.
+    "StageBoundary": _h_layer_boundary,
 }
 
 

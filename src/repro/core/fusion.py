@@ -102,19 +102,21 @@ def _rename(rng: Range, label: str) -> Range:
     return Range(f"{rng.tensor}#{label}", rng.rank, rng.lo, rng.hi)
 
 
-def _clone_task(td: TaskDescriptor, label: str, frag: int) -> TaskDescriptor:
+def _clone_task(td: TaskDescriptor, label: str, frag: int,
+                extra_meta: Optional[dict] = None) -> TaskDescriptor:
     """Fragment-scoped copy: renamed tensors/ops, event fields reset.
 
     ``_allocate_events`` only assigns ``trigger_event`` to tasks that end up
     producers, so stale event ids from the source schedule must be cleared
-    here, not merely overwritten later.
+    here, not merely overwritten later. ``extra_meta`` tags every cloned
+    task (the PP interleaver stamps ``pp_stage``/``pp_microbatch``).
     """
     return dataclasses.replace(
         td,
         inputs=[_rename(r, label) for r in td.inputs],
         outputs=[_rename(r, label) for r in td.outputs],
         op_name=f"{label}/{td.op_name}",
-        meta={**td.meta, "fragment": frag},
+        meta={**td.meta, "fragment": frag, **(extra_meta or {})},
         dependent_event=NO_EVENT,
         trigger_event=NO_EVENT,
         dependent_threshold=0,
@@ -124,18 +126,34 @@ def _clone_task(td: TaskDescriptor, label: str, frag: int) -> TaskDescriptor:
 def _boundary_tasks(up_label: str, dn_label: str, frag: int,
                     src_base: str, dst_base: str,
                     up_cfg: ScheduleConfig, dn_cfg: ScheduleConfig,
-                    boundary_split: int) -> list[TaskDescriptor]:
-    """Per-rank LayerBoundary tiles for one junction.
+                    boundary_split: int, *, kind: str = "layer",
+                    junction: Optional[int] = None,
+                    extra_meta: Optional[dict] = None
+                    ) -> list[TaskDescriptor]:
+    """Per-rank boundary tiles for one junction (Layer- or StageBoundary).
 
     Tiles cover whole cells of the *downstream* plan's send layout, grouped
     into at most ``boundary_split`` chunks per rank. Whole-cell grouping is
     what keeps event allocation legal: every downstream dispatch cell is
     covered by exactly one tile, so each tile triggers exactly one event
     (the dispatch tasks it feeds share it as their sole producer).
+
+    ``kind="layer"`` emits the rank-local token-remap VTQ tile (priced as
+    AIV vector work); ``kind="stage"`` emits the pipeline-parallel twin —
+    the same tiling and dedup invariants, but the tile carries the
+    *activation payload* across the stage link (``comm_bytes`` set, priced
+    on the topology's inter-node link class by the cost model). ``junction``
+    is the id the executor's ``boundary_fns`` are keyed by (defaults to the
+    layer-fusion convention ``frag - 1``).
     """
     up_plan, dn_plan = up_cfg.routing, dn_cfg.routing
     in_row_b = up_cfg.d_model * up_cfg.dtype_bytes
     out_row_b = dn_cfg.d_model * dn_cfg.dtype_bytes
+    if junction is None:
+        junction = frag - 1
+    task_type = "LayerBoundary" if kind == "layer" else "StageBoundary"
+    op_kind = "Boundary" if kind == "layer" else "StageBoundary"
+    comm_kind = "boundary" if kind == "layer" else "stage"
     tds: list[TaskDescriptor] = []
     for r in range(dn_cfg.ep):
         cells = dn_plan.send_cells(r)        # (dst, e, count), contiguous
@@ -164,17 +182,20 @@ def _boundary_tasks(up_label: str, dn_label: str, frag: int,
         for i, (g_lo, g_hi) in enumerate(groups):
             chunk = g_hi - g_lo
             tds.append(TaskDescriptor(
-                task_type="LayerBoundary", queue_type=VTQ,
+                task_type=task_type, queue_type=VTQ,
                 inputs=list(reads),
                 outputs=[Range(f"{dst_base}#{dn_label}", r, g_lo, g_hi)],
                 task_index=i, task_split_num=len(groups),
                 task_split_value=chunk,
                 read_bytes=chunk * in_row_b,
                 write_bytes=chunk * out_row_b,
-                op_name=f"{dn_label}/Boundary@{r}",
-                op_type="layer_boundary", rank=r,
-                meta={"fragment": frag, "boundary": frag - 1,
-                      "comm_kind": "boundary"}))
+                comm_bytes=(chunk * out_row_b if kind == "stage" else 0),
+                src_rank=(r if kind == "stage" else -1),
+                dst_rank=(r if kind == "stage" else -1),
+                op_name=f"{dn_label}/{op_kind}@{r}",
+                op_type=f"{kind}_boundary", rank=r,
+                meta={"fragment": frag, "boundary": junction,
+                      "comm_kind": comm_kind, **(extra_meta or {})}))
     return tds
 
 
@@ -361,6 +382,217 @@ def compile_fused(cfgs: Sequence[ScheduleConfig], direction: str, *,
                           labels=[f"L{i}" for i in order],
                           fused_pipeline=fused_pipeline,
                           boundary_split=boundary_split)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-parallel fusion — stages × microbatches as fragments.
+# ---------------------------------------------------------------------------
+
+def pp_cell_order(n_stages: int, n_microbatches: int,
+                  direction: str) -> list[tuple[int, int]]:
+    """Wave-ordered (stage, microbatch) cells — the 1F1B interleave
+    restricted to one direction.
+
+    Cell (s, m) sits in wave ``depth(s) + m`` where ``depth`` is the
+    stage's pipeline depth in this direction (``s`` forward, ``S-1-s``
+    backward); within a wave, shallower stages come first. Microbatches
+    within a stage therefore always execute in order, and adjacent cells
+    of one wave are exactly the pairs 1F1B runs concurrently — stage s's
+    EP dispatch/combine of microbatch m lands in the queue gaps where
+    stage s would otherwise idle on m±1.
+    """
+    cells = []
+    for s in range(n_stages):
+        depth = s if direction == "forward" else n_stages - 1 - s
+        for m in range(n_microbatches):
+            cells.append((depth + m, depth, s, m))
+    cells.sort()
+    return [(s, m) for (_, _, s, m) in cells]
+
+
+def fuse_pp_schedules(scheds: Sequence[Schedule],
+                      cfgs: Sequence[ScheduleConfig],
+                      n_microbatches: int, *,
+                      fused_pipeline=("pp_interleave",),
+                      boundary_split: int = DEFAULT_BOUNDARY_SPLIT
+                      ) -> FusedSchedule:
+    """Stitch per-*stage* schedules into one PP-fused taskflow.
+
+    ``scheds``/``cfgs`` are per pipeline stage, in stage order; each stage
+    is replicated once per microbatch, yielding ``S × M`` fragments in
+    :func:`pp_cell_order`. Consecutive stages of the *same* microbatch are
+    bridged with ``StageBoundary`` tiles that carry the activation payload
+    over the stage link (physical junction ``m*(S-1) + min(s_up, s_dn)``,
+    identical for forward and backward so one ``boundary_fns`` convention
+    serves both). Every task is stamped ``pp_stage``/``pp_microbatch``,
+    which is what the simulator's ``stage_barrier`` reference, per-cell
+    phase accounting, and the ``pp_interleave`` pass key on.
+    """
+    from .passes import resolve_pipeline
+
+    if not scheds:
+        raise ValueError("fuse_pp_schedules needs at least one stage")
+    if len(scheds) != len(cfgs):
+        raise ValueError(f"{len(scheds)} schedules but {len(cfgs)} configs")
+    if n_microbatches < 1:
+        raise ValueError(f"n_microbatches must be >= 1, "
+                         f"got {n_microbatches}")
+    direction = scheds[0].direction
+    ep = scheds[0].ep
+    for s in scheds:
+        if s.direction != direction:
+            raise ScheduleError(
+                f"cannot fuse mixed directions {direction!r}/{s.direction!r}")
+        if s.ep != ep:
+            raise ScheduleError(f"cannot fuse ep={ep} with ep={s.ep}")
+    src_base, dst_base = _BRIDGE_BASES[direction]
+    S, M = len(scheds), n_microbatches
+    order = pp_cell_order(S, M, direction)
+
+    # A stage has a downstream junction when any stage follows it in this
+    # direction's dataflow; those stages' bridge writers are re-tiled once.
+    def has_downstream(s: int) -> bool:
+        return s < S - 1 if direction == "forward" else s > 0
+
+    views = {s: _fragment_view(sch, src_base if has_downstream(s) else None)
+             for s, sch in enumerate(scheds)}
+
+    tasks: list[TaskDescriptor] = []
+    fragments: list[Fragment] = []
+    bases: list[int] = []
+    boundary_tids: list[tuple[int, ...]] = []
+    for frag, (s, m) in enumerate(order):
+        lab = f"S{s}M{m}"
+        cell_meta = {"pp_stage": s, "pp_microbatch": m}
+        btids: list[int] = []
+        s_up = s - 1 if direction == "forward" else s + 1
+        if 0 <= s_up < S:
+            junction = m * (S - 1) + min(s, s_up)
+            for td in _boundary_tasks(f"S{s_up}M{m}", lab, frag,
+                                      src_base, dst_base,
+                                      cfgs[s_up], cfgs[s], boundary_split,
+                                      kind="stage", junction=junction,
+                                      extra_meta=cell_meta):
+                td.tid = len(tasks)
+                btids.append(td.tid)
+                tasks.append(td)
+        boundary_tids.append(tuple(btids))
+        bases.append(len(tasks))
+        for td in views[s][0]:               # fragment-local position order
+            c = _clone_task(td, lab, frag, extra_meta=cell_meta)
+            c.tid = len(tasks)
+            tasks.append(c)
+        fragments.append(Fragment(index=frag, label=lab,
+                                  tid_lo=bases[frag], tid_hi=len(tasks),
+                                  boundary_tids=tuple(btids)))
+
+    deps = _derive_dependencies(tasks)
+    events = _allocate_events(tasks, deps)
+
+    queues: dict[tuple[int, str], list[int]] = defaultdict(list)
+    for frag, (s, m) in enumerate(order):
+        for tid in boundary_tids[frag]:
+            queues[(tasks[tid].rank, VTQ)].append(tid)
+        fqueues = views[s][1]
+        for (rank, qt) in sorted(fqueues):
+            queues[(rank, qt)].extend(bases[frag] + t
+                                      for t in fqueues[(rank, qt)])
+
+    fused_pipe = resolve_pipeline(fused_pipeline)
+    fs = FusedSchedule(
+        direction=direction, ep=ep, tasks=tasks, events=events,
+        queues=dict(queues),
+        opts={"pipeline": fused_pipe.spec(),
+              "fragment_pipelines": [list(scheds[s].opts.get("pipeline", []))
+                                     for (s, _) in order],
+              "fragment_labels": [f.label for f in fragments],
+              "boundary_split": boundary_split,
+              "pp": {"n_stages": S, "n_microbatches": M,
+                     "order": [[s, m] for (s, m) in order]}},
+        fragments=tuple(fragments))
+
+    fused_pipe.run(fs, cfgs[0])
+    validate_schedule(fs)
+    return fs
+
+
+def compile_pp_fused(cfgs: Sequence[ScheduleConfig], n_microbatches: int,
+                     n_stages: Optional[int] = None, *,
+                     direction: str = "forward",
+                     pipeline=None, pipelines=None,
+                     fused_pipeline=("pp_interleave",),
+                     boundary_split: int = DEFAULT_BOUNDARY_SPLIT
+                     ) -> FusedSchedule:
+    """Compile per-stage configs (stage order) into a PP-fused schedule.
+
+    ``cfgs`` gives one config per pipeline stage; a single config is
+    replicated to ``n_stages`` (uniform pipeline). Per-stage schedules are
+    compiled once (``pipeline="auto"`` resolves per stage, like the unfused
+    path) and cloned per microbatch by :func:`fuse_pp_schedules`.
+    """
+    if direction not in _BRIDGE_BASES:
+        raise ValueError(f"direction must be forward|backward, "
+                         f"got {direction!r}")
+    cfgs = list(cfgs)
+    if not cfgs:
+        raise ValueError("compile_pp_fused needs at least one config")
+    if n_stages is None:
+        n_stages = len(cfgs)
+    if len(cfgs) == 1 and n_stages > 1:
+        cfgs = cfgs * n_stages
+    if len(cfgs) != n_stages:
+        raise ValueError(f"{len(cfgs)} configs but n_stages={n_stages}")
+    if pipelines is None:
+        pipelines = [pipeline] * n_stages
+    if len(pipelines) != n_stages:
+        raise ValueError(f"{n_stages} stages but {len(pipelines)} pipelines")
+    builder = (build_moe_ffn_forward if direction == "forward"
+               else build_moe_ffn_backward)
+    scheds = [compile_schedule(builder(cfg), pipeline=p)
+              for cfg, p in zip(cfgs, pipelines)]
+    return fuse_pp_schedules(scheds, cfgs, n_microbatches,
+                             fused_pipeline=fused_pipeline,
+                             boundary_split=boundary_split)
+
+
+def pp_fragment_cfgs(fs: FusedSchedule, cfgs) -> list:
+    """Per-fragment config list (execution order) for
+    ``ExecutorState(fragment_cfgs=...)``: ``cfgs`` is per stage."""
+    return [cfgs[s] for (s, _) in fs.opts["pp"]["order"]]
+
+
+def load_pp_forward_state(fs: FusedSchedule, cfgs, st,
+                          x_srcs, w1s, w2s) -> None:
+    """``cfgs``/``w1s``/``w2s`` per *stage* (stage order); ``x_srcs[m]`` is
+    microbatch m's per-rank input list for stage 0."""
+    pp = fs.opts["pp"]
+    for (s, _), frag in zip(pp["order"], fs.fragments):
+        for r in range(cfgs[s].ep):
+            st.set_weight(f"W1#{frag.label}", r, w1s[s][r])
+            st.set_weight(f"W2#{frag.label}", r, w2s[s][r])
+    for m in range(pp["n_microbatches"]):
+        for r in range(cfgs[0].ep):
+            st.set_buffer(f"x_src#S0M{m}", r, x_srcs[m][r])
+
+
+def load_pp_backward_state(fs: FusedSchedule, cfgs, st,
+                           dys, fwds, w1s, w2s) -> None:
+    """Backward twin: ``dys[m]`` is microbatch m's upstream gradient at the
+    last stage; ``fwds[m][s]`` the saved forward dict of cell (s, m)."""
+    pp = fs.opts["pp"]
+    S = pp["n_stages"]
+    for (s, m), frag in zip(pp["order"], fs.fragments):
+        lab = frag.label
+        for r in range(cfgs[s].ep):
+            st.set_weight(f"W1#{lab}", r, w1s[s][r])
+            st.set_weight(f"W2#{lab}", r, w2s[s][r])
+            st.set_buffer(f"g_saved#{lab}", r, fwds[m][s]["g"][r])
+            st.set_buffer(f"h_saved#{lab}", r, fwds[m][s]["h"][r])
+            st.set_buffer(f"x_recv_saved#{lab}", r,
+                          fwds[m][s]["x_recv"][r])
+    for m in range(pp["n_microbatches"]):
+        for r in range(cfgs[-1].ep):
+            st.set_buffer(f"dy_src#S{S - 1}M{m}", r, dys[m][r])
 
 
 # ---------------------------------------------------------------------------

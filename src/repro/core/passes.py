@@ -266,3 +266,14 @@ def _pass_fuse_boundary(sched, cfg: ScheduleConfig) -> None:
     schedules."""
     from .reorder import apply_fuse_boundary
     apply_fuse_boundary(sched, cfg)
+
+
+@register_pass("pp_interleave")
+def _pass_pp_interleave(sched, cfg: ScheduleConfig) -> None:
+    """Cell-spanning pass for PP-fused schedules (compile_pp_fused): hoist
+    each (stage, microbatch) cell's combine tiles toward the ranks with
+    the heaviest *same-microbatch next-stage* dispatch traffic — the 1F1B
+    analogue of ``fuse_boundary``, which would mis-resolve the downstream
+    cell under the wave order. No-op without pp_stage metadata."""
+    from .reorder import apply_pp_interleave
+    apply_pp_interleave(sched, cfg)

@@ -362,6 +362,48 @@ def apply_fuse_boundary(sched, cfg: ScheduleConfig) -> None:
         sched.queues[(rank, qtype)] = reorder_comm_blocks(sched, q, key)
 
 
+def apply_pp_interleave(sched, cfg: ScheduleConfig) -> None:
+    """PP-aware twin of :func:`apply_fuse_boundary` for stage-fused
+    schedules.
+
+    In a PP-fused taskflow the consumer of cell (s, m)'s combine traffic is
+    the *same-microbatch next-stage* cell — (s+1, m) forward, (s-1, m)
+    backward — not the next execution position (which under the 1F1B wave
+    order is usually another microbatch of a different stage). Resolve the
+    true downstream cell through ``pp_stage``/``pp_microbatch`` metadata
+    and stably hoist, within each combine block, the tiles returning to
+    ranks with the heaviest downstream dispatch: those feed the
+    StageBoundary handoff that gates the next stage. Like
+    ``fuse_boundary``, this only reorders *within* contiguous comm blocks
+    — it can never hoist a task ahead of a same-queue producer, so the
+    head-blocking validation order stays legal. No-op without PP metadata.
+    """
+    dn_dispatch = defaultdict(float)     # ((stage, microbatch), rank) -> B
+    for td in sched.tasks:
+        if (td.task_type == "put_mem_signal"
+                and td.meta.get("comm_kind") == "dispatch"
+                and "pp_stage" in td.meta):
+            cell = (td.meta["pp_stage"], td.meta.get("pp_microbatch", 0))
+            dn_dispatch[(cell, td.rank)] += td.comm_bytes
+    if not dn_dispatch:
+        return
+    step = 1 if sched.direction == "forward" else -1
+
+    def key(tid):
+        td = sched.tasks[tid]
+        if (td.meta.get("comm_kind") != "combine"
+                or "pp_stage" not in td.meta):
+            return (0.0,)
+        dn_cell = (td.meta["pp_stage"] + step,
+                   td.meta.get("pp_microbatch", 0))
+        return (-dn_dispatch.get((dn_cell, td.dst_rank), 0.0),)
+
+    for (rank, qtype), q in sched.queues.items():
+        if qtype != VTQ:
+            continue
+        sched.queues[(rank, qtype)] = reorder_comm_blocks(sched, q, key)
+
+
 def apply_reorderings(sched, cfg: ScheduleConfig, *, ratr: bool,
                       gmm_interleave: bool,
                       chain_interleave: bool = False) -> None:

@@ -56,6 +56,12 @@ class SimResult:
     # of that fragment's tasks. Overlap shows up as spans summing to more
     # than the makespan.
     fragment_makespan_us: dict = dataclasses.field(default_factory=dict)
+    # PP-fused schedules (tasks stamped pp_stage/pp_microbatch):
+    # per-(stage, microbatch) wall-clock span and per-phase busy breakdown.
+    # Bubble absorption shows up as a cell's "stage"/"dispatch" phase time
+    # overlapping the neighbouring cells' spans.
+    stage_span_us: dict = dataclasses.field(default_factory=dict)
+    stage_phase_us: dict = dataclasses.field(default_factory=dict)
     # Per-link-class transfer busy time: {"local"/"link"} flat, or
     # {"local"/"intra"/"inter"} when the cost model carries a Topology —
     # where the comm time actually lives in a hierarchical cluster.
@@ -72,6 +78,8 @@ def _phase_of(td: TaskDescriptor) -> str:
         return td.meta.get("comm_kind", "dispatch")
     if td.task_type == "LayerBoundary":
         return "boundary"
+    if td.task_type == "StageBoundary":
+        return "stage"
     return "gmm" if td.queue_type == CTQ else "vector"
 
 
@@ -108,7 +116,9 @@ def _task_duration_us(td: TaskDescriptor, cost: CostModel, l2: _L2,
     — which input tiles hit, what the miss allocates — and hands the
     resulting hit fraction to the model.
     """
-    if td.task_type == "put_mem_signal":
+    if td.task_type in ("put_mem_signal", "StageBoundary"):
+        # Link-bound tasks: no L2 term — a StageBoundary tile streams the
+        # activation payload over the stage link, not from HBM.
         return cost.task_us(td)
     total_rows = sum(r.hi - r.lo for r in td.inputs) or 1
     hit_b = miss_b = 0.0
@@ -138,7 +148,8 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
                      serialize_dispatch: bool = False,
                      workers_per_pool: dict | None = None,
                      cost: CostModel | None = None,
-                     fragment_barrier: bool = False) -> SimResult:
+                     fragment_barrier: bool = False,
+                     stage_barrier: bool = False) -> SimResult:
     """Event-driven simulation of the single-launch unified runtime.
 
     ``serialize_dispatch`` models an *online dynamic* scheduler: task
@@ -152,7 +163,18 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
     finished. This is the back-to-back per-layer reference a fused
     schedule is measured against — identical tasks and costs, with the
     cross-fragment overlap switched off.
+    ``stage_barrier`` is the pipeline-parallel analogue: cell (s, m) of a
+    PP-fused schedule may not start until its feeding cell (same
+    microbatch, previous stage in this direction's dataflow) and its
+    stage predecessor (same stage, previous microbatch) have fully
+    drained. That is a synchronous pipeline — still pipelined across
+    stages, but with no intra-cell work absorbed into neighbours' bubbles
+    — the fair reference PP fusion is measured against. On schedules
+    without pp_stage metadata it degrades to ``fragment_barrier``.
     """
+    if fragment_barrier and stage_barrier:
+        raise ValueError("fragment_barrier and stage_barrier are "
+                         "mutually exclusive references")
     cost = cost or CostModel(hw=hw)
     oh = (hw.static_dispatch_us if dispatch_overhead_us is None
           else dispatch_overhead_us)
@@ -187,6 +209,8 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
     cube_busy_intervals: list[tuple[float, float]] = []
     phase_busy: dict = defaultdict(float)
     frag_span: dict = {}
+    stage_span: dict = {}
+    stage_phase: dict = defaultdict(lambda: defaultdict(float))
     d2c = [None, None]        # [first dispatch begin, last combine end]
 
     def frag_of(td):
@@ -195,10 +219,35 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
     frag_total: dict[int, int] = defaultdict(int)
     frag_done: dict[int, int] = defaultdict(int)
     barrier_waiters: dict[int, list[int]] = defaultdict(list)
-    if fragment_barrier:
+    if fragment_barrier or stage_barrier:
         for td in s.tasks:
             frag_total[frag_of(td)] += 1
     open_frag = min(frag_total, default=0)
+    # stage_barrier prerequisite graph: fragment -> fragments that must
+    # fully drain first (feeding cell + same-stage predecessor microbatch).
+    frag_prereq: dict[int, tuple[int, ...]] = {}
+    stage_waiters: dict[int, list[int]] = defaultdict(list)
+    if stage_barrier:
+        frag_cell: dict[int, tuple[int, int]] = {}
+        for td in s.tasks:
+            f = frag_of(td)
+            if f not in frag_cell and "pp_stage" in td.meta:
+                frag_cell[f] = (td.meta["pp_stage"],
+                                td.meta.get("pp_microbatch", 0))
+        if frag_cell:
+            cell_frag = {c: f for f, c in frag_cell.items()}
+            step = 1 if s.direction == "forward" else -1
+            for f, (st_, m) in frag_cell.items():
+                frag_prereq[f] = tuple(
+                    cell_frag[c] for c in ((st_, m - 1), (st_ - step, m))
+                    if c in cell_frag)
+        else:
+            frag_prereq = {f: ((f - 1,) if f - 1 in frag_total else ())
+                           for f in frag_total}
+
+    def cell_ready(f):
+        return all(frag_done[p] >= frag_total[p]
+                   for p in frag_prereq.get(f, ()))
 
     def push(t, kind, payload):
         nonlocal seq
@@ -233,6 +282,8 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
             td = s.tasks[tid]
             if fragment_barrier and frag_of(td) > open_frag:
                 barrier_waiters[frag_of(td)].append(tid)
+            elif stage_barrier and not cell_ready(frag_of(td)):
+                stage_waiters[frag_of(td)].append(tid)
             else:
                 admit(tid, t)
 
@@ -258,6 +309,17 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
             link_busy[cls] += dur
         elif td.task_type == "put_mem_signal":
             link_busy[cost.link_class_of(td)] += dur
+        elif td.task_type == "StageBoundary":
+            # The activation handoff rides the stage link's egress from
+            # this rank, sharing the wire with EP cross-node traffic of the
+            # same class — PP fusion only wins when the bubble has room for
+            # both.
+            cls = cost.link_class_of(td)
+            e0 = max(egress_free[(td.rank, cls)], t) + dur
+            egress_free[(td.rank, cls)] = e0
+            begin = e0 - dur
+            comm_busy_intervals.append((begin, begin + dur))
+            link_busy[cls] += dur
         end = begin + dur
         key = (td.rank, td.queue_type)
         busy[key] += dur
@@ -273,6 +335,12 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
         if fr is not None:
             lo, hi = frag_span.get(fr, (begin, end))
             frag_span[fr] = (min(lo, begin), max(hi, end))
+        ps = td.meta.get("pp_stage")
+        if ps is not None:
+            cell = (ps, td.meta.get("pp_microbatch", 0))
+            lo, hi = stage_span.get(cell, (begin, end))
+            stage_span[cell] = (min(lo, begin), max(hi, end))
+            stage_phase[cell][ph] += dur
         timeline.append((begin, end, td.rank, td.queue_type, td.op_name))
         push(end, "finish", tid)
 
@@ -297,6 +365,13 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
                     open_frag += 1
                     for w in barrier_waiters.pop(open_frag, []):
                         admit(w, now)
+            elif stage_barrier:
+                f = frag_of(td)
+                frag_done[f] += 1
+                if frag_done[f] >= frag_total[f]:
+                    for wf in [w for w in stage_waiters if cell_ready(w)]:
+                        for w in stage_waiters.pop(wf):
+                            admit(w, now)
             if td.trigger_event != NO_EVENT:
                 eid = td.trigger_event
                 counters[eid] += 1
@@ -328,6 +403,10 @@ def simulate_unified(s: Schedule, hw: AscendA3 = AscendA3(), *,
                      dispatch_to_combine_us=d2c_us,
                      fragment_makespan_us={f: hi - lo for f, (lo, hi)
                                            in sorted(frag_span.items())},
+                     stage_span_us={c: hi - lo for c, (lo, hi)
+                                    in sorted(stage_span.items())},
+                     stage_phase_us={c: dict(v) for c, v
+                                     in sorted(stage_phase.items())},
                      link_us=dict(link_busy))
 
 

@@ -315,7 +315,8 @@ class SSCCache:
     @classmethod
     def _retag_key(cls, k: tuple) -> tuple:
         if k and k[0] == "fused":
-            return k[:4] + (tuple(cls._tag_bucket(lk) for lk in k[4]),)
+            return (k[:4] + (tuple(cls._tag_bucket(lk) for lk in k[4]),)
+                    + k[5:])
         return cls._tag_bucket(k)
 
     def rekey_for_mesh(self, new_ep: int) -> dict:
@@ -414,9 +415,11 @@ class SSCCache:
         ``cfgs`` are the per-layer configs in *layer* order; the cache key
         is the tuple of the per-layer keys (each resolved exactly as the
         unfused path resolves it, so per-layer ``pipeline="auto"`` works)
-        plus the fused pipeline and boundary tiling. One multi-fragment
-        blob per distinct plan tuple; ``info()`` reports its fragment
-        count next to its byte size.
+        plus the fused pipeline, boundary tiling, and the fusion shape
+        tuple ``(boundary kind, n_stages, n_microbatches)`` — layer fusion
+        is ``("layer", K, 1)``, keeping it disjoint from PP-fused blobs of
+        the same plans. One multi-fragment blob per distinct plan tuple;
+        ``info()`` reports its fragment count next to its byte size.
         """
         from .fusion import DEFAULT_BOUNDARY_SPLIT, compile_fused
         if boundary_split is None:
@@ -428,7 +431,8 @@ class SSCCache:
         fp = resolve_pipeline(fused_pipeline)
         k = ("fused", direction, fp.key(), boundary_split,
              tuple(self.key(c, direction, pipeline=p)
-                   for (c, p) in resolved))
+                   for (c, p) in resolved),
+             ("layer", len(cfgs), 1))
         blob = self._cache.get(k)
         if blob is None:
             self.misses += 1
@@ -438,6 +442,46 @@ class SSCCache:
                                boundary_split=boundary_split)
             blob = schedule_to_ssc(fs)
             self._insert(k, blob, fragments=len(cfgs))
+        else:
+            self.hits += 1
+            self._cache.move_to_end(k)
+        return ssc_to_schedule(blob)
+
+    def get_or_compile_pp_fused(self, cfgs, n_microbatches: int,
+                                direction: str, pipeline=None,
+                                pipelines=None,
+                                fused_pipeline=("pp_interleave",),
+                                boundary_split: Optional[int] = None,
+                                **opts) -> Schedule:
+        """PP-fused twin: ``cfgs`` per *stage* (stage order), replicated
+        across ``n_microbatches`` by ``compile_pp_fused``. Keys share the
+        fused namespace with :meth:`get_or_compile_fused` but carry
+        ``("stage", n_stages, n_microbatches)``, so the same stage plans
+        at different microbatch counts (or vs layer fusion) never alias.
+        """
+        from .fusion import DEFAULT_BOUNDARY_SPLIT, compile_pp_fused
+        if boundary_split is None:
+            boundary_split = DEFAULT_BOUNDARY_SPLIT
+        if pipelines is None:
+            pipelines = [pipeline] * len(cfgs)
+        resolved = [self._resolve(c, direction, p, opts)
+                    for c, p in zip(cfgs, pipelines)]
+        fp = resolve_pipeline(fused_pipeline)
+        k = ("fused", direction, fp.key(), boundary_split,
+             tuple(self.key(c, direction, pipeline=p)
+                   for (c, p) in resolved),
+             ("stage", len(cfgs), int(n_microbatches)))
+        blob = self._cache.get(k)
+        if blob is None:
+            self.misses += 1
+            fs = compile_pp_fused([c for (c, _) in resolved],
+                                  n_microbatches, direction=direction,
+                                  pipelines=[p for (_, p) in resolved],
+                                  fused_pipeline=fp,
+                                  boundary_split=boundary_split)
+            blob = schedule_to_ssc(fs)
+            self._insert(k, blob,
+                         fragments=len(cfgs) * int(n_microbatches))
         else:
             self.hits += 1
             self._cache.move_to_end(k)

@@ -394,33 +394,39 @@ def _make_impl(dc: DroplessConfig, cache: SSCCache, live=None):
 
 
 # ---------------------------------------------------------------------------
-# Fused two-layer block: one multi-fragment taskflow per direction.
+# Fused K-layer block: one multi-fragment taskflow per direction.
 # ---------------------------------------------------------------------------
 
 
 class FusedDroplessMoE:
-    """Two consecutive dropless MoE layers as one fused taskflow.
+    """K >= 2 consecutive dropless MoE layers as one fused taskflow.
 
-    Fragment boundary contract (parallel routers): *both* layers' routers
-    are evaluated on the block input ``x``, so both routing plans — and
+    Fragment boundary contract (parallel routers): *every* layer's router
+    is evaluated on the block input ``x``, so all K routing plans — and
     therefore the complete multi-fragment taskflow, boundary tiles
-    included — are known before the first dispatch launches. The
-    inter-layer token remap (layer 0's combine-weighted gather composed
-    with layer 1's send-buffer scatter) is exactly rank-local, so it runs
-    as LayerBoundary tiles *inside* the taskflow and layer 1's dispatch
-    traffic overlaps layer 0's combine tail.
+    included — are known before the first dispatch launches. Each
+    inter-layer token remap (layer j's combine-weighted gather composed
+    with layer j+1's send-buffer scatter) is exactly rank-local, so it
+    runs as LayerBoundary tiles *inside* the taskflow and layer j+1's
+    dispatch traffic overlaps layer j's combine tail.
 
     ``fuse=False`` keeps identical parallel-router semantics but executes
-    the two per-layer schedules back to back with host bridge ops in
+    the K per-layer schedules back to back with host bridge ops in
     between — the bit-exact sequential twin the fused path is tested
-    against (fwd and bwd).
+    against (fwd and bwd). ``fuse="auto"`` decides per batch through
+    ``core.autoselect.select_fused``, which prices the in-taskflow
+    boundary remap against the host-bridge round-trip the sequential twin
+    pays per junction.
     """
 
     def __init__(self, dc: DroplessConfig, act: str = "swiglu",
-                 cache: Optional[SSCCache] = None, fuse: bool = True):
+                 cache: Optional[SSCCache] = None, fuse=True):
         if act != "swiglu":
             raise ValueError(
                 f"dropless schedules execute the SwiGLU fragment; act={act!r}")
+        if not (isinstance(fuse, bool) or fuse == "auto"):
+            raise ValueError(f'fuse must be True, False or "auto", '
+                             f"got {fuse!r}")
         self.dc = dc
         self.fuse = fuse
         self.cache = cache if cache is not None else get_process_cache(
@@ -428,26 +434,30 @@ class FusedDroplessMoE:
         self.impl = _make_fused_impl(dc, self.cache, fuse)
 
 
-def _make_fused_impl(dc: DroplessConfig, cache: SSCCache, fuse: bool):
-    """Build ``block_impl(params, x, mc)`` for a fused two-layer block.
+def _make_fused_impl(dc: DroplessConfig, cache: SSCCache, fuse):
+    """Build ``block_impl(params, x, mc)`` for a fused K-layer block.
 
-    ``params`` is a two-element sequence of per-layer dicts, each with
-    ``router`` / ``w_in`` / ``w_down``.
+    ``params`` is a sequence of K >= 2 per-layer dicts, each with
+    ``router`` / ``w_in`` / ``w_down``. Layer arrays travel through the
+    custom-vjp fragment as tuples (pytree leaves), so one fragment
+    signature serves every K.
     """
 
     def block_impl(params, x, mc):
         from repro.models.moe import router_topk
 
-        p_lo, p_hi = params
+        params = list(params)
+        K = len(params)
+        if K < 2:
+            raise ValueError(f"FusedDroplessMoE needs >= 2 layers, got {K}")
         B, S, d = x.shape
         T = B * S
         if T % dc.ep:
             raise ValueError(f"T={T} tokens not divisible by dropless "
                              f"ep={dc.ep}")
         xt = x.reshape(T, d)
-        # Parallel-router contract: both plans derive from the block input.
-        tp0, ti0 = router_topk(p_lo["router"], xt, mc)
-        tp1, ti1 = router_topk(p_hi["router"], xt, mc)
+        # Parallel-router contract: every plan derives from the block input.
+        tps, tis = zip(*[router_topk(p["router"], xt, mc) for p in params])
 
         f = mc.d_expert
         e_loc = mc.e_total // dc.ep
@@ -460,6 +470,12 @@ def _make_fused_impl(dc: DroplessConfig, cache: SSCCache, fuse: bool):
             w2 = np.asarray(w_down_h, np.float32).reshape(
                 dc.ep, e_loc, f, d)
             return w1, w2
+
+        def _do_fuse(cfgs, direction):
+            if isinstance(fuse, bool):
+                return fuse
+            from repro.core.autoselect import select_fused
+            return select_fused(tuple(cfgs), direction=direction).fuse
 
         def _dy_of(plan, rows, tp3, g3):
             # Per-row cotangent entering a backward fragment — statement
@@ -495,178 +511,178 @@ def _make_fused_impl(dc: DroplessConfig, cache: SSCCache, fuse: bool):
             return [st.get(tensor, r) if plan.send_rows(r)
                     else np.zeros((0, d), np.float32) for r in range(dc.ep)]
 
+        def _dw_of(st_l, suffix, plan):
+            dw1 = np.stack([st_l.get(f"dW1{suffix}", r) if plan.recv_rows(r)
+                            else np.zeros((e_loc, d, 2 * f), np.float32)
+                            for r in range(dc.ep)])
+            dw2 = np.stack([st_l.get(f"dW2{suffix}", r) if plan.recv_rows(r)
+                            else np.zeros((e_loc, f, d), np.float32)
+                            for r in range(dc.ep)])
+            return (dw1.reshape(mc.e_total, d, 2 * f),
+                    dw2.reshape(mc.e_total, f, d))
+
         # ---- host callbacks ------------------------------------------------
-        def fwd_host(xt_h, tp0_h, ti0_h, tp1_h, ti1_h,
-                     win0, wdn0, win1, wdn1):
+        def fwd_host(xt_h, tps_h, tis_h, wins_h, wdns_h):
             from repro.core import executor as ex
             from repro.core import fusion as fu
             from repro.models.moe import (bridge_combine, bridge_dispatch,
                                           fused_boundary_forward)
 
             xt_h = np.asarray(xt_h, np.float32)
-            tp0_h = np.asarray(tp0_h, np.float32)
-            tp1_h = np.asarray(tp1_h, np.float32)
-            w10, w20 = _shape_w(win0, wdn0)
-            w11, w21 = _shape_w(win1, wdn1)
-            b0 = _bridge_of(dc, ti0_h, mc, cache)
-            b1 = _bridge_of(dc, ti1_h, mc, cache)
-            cfg0 = _schedule_cfg(dc, b0.plan, d, f)
-            cfg1 = _schedule_cfg(dc, b1.plan, d, f)
+            tps_h = [np.asarray(t, np.float32) for t in tps_h]
+            ws = [_shape_w(wi, wd) for wi, wd in zip(wins_h, wdns_h)]
+            bs = [_bridge_of(dc, ti, mc, cache) for ti in tis_h]
+            cfgs = [_schedule_cfg(dc, b.plan, d, f) for b in bs]
 
-            x_src = bridge_dispatch(b0, xt_h.reshape(dc.ep, t_loc, d))
-            if fuse:
+            x_src = bridge_dispatch(bs[0], xt_h.reshape(dc.ep, t_loc, d))
+            if _do_fuse(cfgs, "forward"):
                 fs = cache.get_or_compile_fused(
-                    [cfg0, cfg1], "forward", pipeline=dc.pipeline_spec())
-                st = ex.ExecutorState(cfg0, fragment_cfgs=[cfg0, cfg1])
-                fu.load_fused_forward_state(fs, [cfg0, cfg1], st, x_src,
-                                            [w10, w11], [w20, w21])
+                    cfgs, "forward", pipeline=dc.pipeline_spec())
+                st = ex.ExecutorState(cfgs[0], fragment_cfgs=cfgs)
+                fu.load_fused_forward_state(fs, cfgs, st, x_src,
+                                            [w1 for w1, _ in ws],
+                                            [w2 for _, w2 in ws])
                 st.boundary_fns = {
-                    (0, r): fn for r, fn in fused_boundary_forward(
-                        b0, b1, tp0_h, d).items()}
+                    (j, r): fn
+                    for j in range(K - 1)
+                    for r, fn in fused_boundary_forward(
+                        bs[j], bs[j + 1], tps_h[j], d).items()}
                 ex.execute(fs, st, rng=np.random.default_rng(0))
-                y_ret1 = _ret_bufs(st, "y_ret#L1", b1.plan)
+                y_ret = _ret_bufs(st, f"y_ret#L{K - 1}", bs[-1].plan)
             else:
-                s0 = cache.get_or_compile(cfg0, "forward",
-                                          pipeline=dc.pipeline_spec())
-                st0 = ex.ExecutorState(cfg0)
-                ex.load_forward_state_plan(cfg0, st0, x_src, w10, w20)
-                ex.execute(s0, st0, rng=np.random.default_rng(0))
-                y0 = bridge_combine(b0, _ret_bufs(st0, "y_ret", b0.plan),
-                                    tp0_h)
-                s1 = cache.get_or_compile(cfg1, "forward",
-                                          pipeline=dc.pipeline_spec())
-                st1 = ex.ExecutorState(cfg1)
-                ex.load_forward_state_plan(cfg1, st1,
-                                           bridge_dispatch(b1, y0), w11, w21)
-                ex.execute(s1, st1, rng=np.random.default_rng(0))
-                y_ret1 = _ret_bufs(st1, "y_ret", b1.plan)
-            y = bridge_combine(b1, y_ret1, tp1_h)
+                cur = x_src
+                for j in range(K):
+                    sj = cache.get_or_compile(cfgs[j], "forward",
+                                              pipeline=dc.pipeline_spec())
+                    stj = ex.ExecutorState(cfgs[j])
+                    ex.load_forward_state_plan(cfgs[j], stj, cur,
+                                               ws[j][0], ws[j][1])
+                    ex.execute(sj, stj, rng=np.random.default_rng(0))
+                    y_ret = _ret_bufs(stj, "y_ret", bs[j].plan)
+                    if j < K - 1:
+                        yj = bridge_combine(bs[j], y_ret, tps_h[j])
+                        cur = bridge_dispatch(bs[j + 1], yj)
+            y = bridge_combine(bs[-1], y_ret, tps_h[-1])
             return y.reshape(T, d)
 
-        def bwd_host(xt_h, tp0_h, ti0_h, tp1_h, ti1_h,
-                     win0, wdn0, win1, wdn1, g_h):
+        def bwd_host(xt_h, tps_h, tis_h, wins_h, wdns_h, g_h):
             from repro.core import executor as ex
             from repro.core import fusion as fu
             from repro.models.moe import (bridge_combine, bridge_dispatch,
                                           fused_boundary_backward)
 
             xt_h = np.asarray(xt_h, np.float32)
-            tp0_h = np.asarray(tp0_h, np.float32)
-            tp1_h = np.asarray(tp1_h, np.float32)
+            tps_h = [np.asarray(t, np.float32) for t in tps_h]
             g = np.asarray(g_h, np.float32)
-            w10, w20 = _shape_w(win0, wdn0)
-            w11, w21 = _shape_w(win1, wdn1)
-            b0 = _bridge_of(dc, ti0_h, mc)
-            b1 = _bridge_of(dc, ti1_h, mc)
-            cfg0 = _schedule_cfg(dc, b0.plan, d, f)
-            cfg1 = _schedule_cfg(dc, b1.plan, d, f)
+            ws = [_shape_w(wi, wd) for wi, wd in zip(wins_h, wdns_h)]
+            bs = [_bridge_of(dc, ti, mc) for ti in tis_h]
+            cfgs = [_schedule_cfg(dc, b.plan, d, f) for b in bs]
             g3 = g.reshape(dc.ep, t_loc, d)
-            tp03 = tp0_h.reshape(dc.ep, t_loc, k)
-            tp13 = tp1_h.reshape(dc.ep, t_loc, k)
+            tp3s = [t.reshape(dc.ep, t_loc, k) for t in tps_h]
 
-            # Recompute both layers' saved activations.
-            x_src0 = bridge_dispatch(b0, xt_h.reshape(dc.ep, t_loc, d))
-            fwd0 = ex.reference_forward_plan(cfg0, x_src0, w10, w20)
-            y0 = bridge_combine(b0, fwd0["y_ret"], tp0_h)
-            fwd1 = ex.reference_forward_plan(cfg1, bridge_dispatch(b1, y0),
-                                             w11, w21)
-            dy1 = _dy_of(b1.plan, b1.send_row, tp13, g3)
+            # Recompute every layer's saved activations.
+            fwds = []
+            cur = bridge_dispatch(bs[0], xt_h.reshape(dc.ep, t_loc, d))
+            for j in range(K):
+                fwds.append(ex.reference_forward_plan(cfgs[j], cur,
+                                                      ws[j][0], ws[j][1]))
+                if j < K - 1:
+                    yj = bridge_combine(bs[j], fwds[j]["y_ret"], tps_h[j])
+                    cur = bridge_dispatch(bs[j + 1], yj)
+            dy_top = _dy_of(bs[-1].plan, bs[-1].send_row, tp3s[-1], g3)
 
-            if fuse:
+            dtps = [None] * K
+            dws = [None] * K
+            if _do_fuse(cfgs, "backward"):
                 fs = cache.get_or_compile_fused(
-                    [cfg0, cfg1], "backward", pipeline=dc.pipeline_spec())
-                st = ex.ExecutorState(cfg1, fragment_cfgs=[cfg1, cfg0])
-                fu.load_fused_backward_state(fs, [cfg1, cfg0], st, dy1,
-                                             [fwd1, fwd0], [w11, w10],
-                                             [w21, w20])
-                st.boundary_fns = {
-                    (0, r): fn for r, fn in fused_boundary_backward(
-                        b0, b1, tp0_h, d).items()}
+                    cfgs, "backward", pipeline=dc.pipeline_spec())
+                exec_cfgs = cfgs[::-1]       # top layer's gradient first
+                st = ex.ExecutorState(cfgs[-1], fragment_cfgs=exec_cfgs)
+                fu.load_fused_backward_state(
+                    fs, exec_cfgs, st, dy_top, fwds[::-1],
+                    [w1 for w1, _ in ws][::-1], [w2 for _, w2 in ws][::-1])
+                # Execution junction e sits between execution positions e
+                # and e+1 (layers K-1-e and K-2-e) — the physical junction
+                # p = K-2-e, whose remap transposes the forward boundary.
+                st.boundary_fns = {}
+                for e in range(K - 1):
+                    p = K - 2 - e
+                    for r, fn in fused_boundary_backward(
+                            bs[p], bs[p + 1], tps_h[p], d).items():
+                        st.boundary_fns[(e, r)] = fn
                 ex.execute(fs, st, rng=np.random.default_rng(0))
-                dx1_tok, dtp1 = _token_grads(
-                    b1, _ret_bufs(st, "dx_ret#L1", b1.plan),
-                    fwd1["y_ret"], g3, tp13)
-                dx0_tok, dtp0 = _token_grads(
-                    b0, _ret_bufs(st, "dx_ret#L0", b0.plan),
-                    fwd0["y_ret"], dx1_tok, tp03)
-                sts = {0: st, 1: st}
-                suff = {0: "#L0", 1: "#L1"}
+                g_up = g3
+                for layer in range(K - 1, -1, -1):
+                    dx_tok, dtps[layer] = _token_grads(
+                        bs[layer],
+                        _ret_bufs(st, f"dx_ret#L{layer}", bs[layer].plan),
+                        fwds[layer]["y_ret"], g_up, tp3s[layer])
+                    g_up = dx_tok
+                    dws[layer] = _dw_of(st, f"#L{layer}", bs[layer].plan)
             else:
-                s1 = cache.get_or_compile(cfg1, "backward",
-                                          pipeline=dc.pipeline_spec())
-                st1 = ex.ExecutorState(cfg1)
-                ex.load_backward_state_plan(cfg1, st1, fwd1, w11, w21, dy1)
-                ex.execute(s1, st1, rng=np.random.default_rng(0))
-                dx1_tok, dtp1 = _token_grads(
-                    b1, _ret_bufs(st1, "dx_ret", b1.plan),
-                    fwd1["y_ret"], g3, tp13)
-                dy0 = _dy_of(b0.plan, b0.send_row, tp03, dx1_tok)
-                s0 = cache.get_or_compile(cfg0, "backward",
-                                          pipeline=dc.pipeline_spec())
-                st0 = ex.ExecutorState(cfg0)
-                ex.load_backward_state_plan(cfg0, st0, fwd0, w10, w20, dy0)
-                ex.execute(s0, st0, rng=np.random.default_rng(0))
-                dx0_tok, dtp0 = _token_grads(
-                    b0, _ret_bufs(st0, "dx_ret", b0.plan),
-                    fwd0["y_ret"], dx1_tok, tp03)
-                sts = {0: st0, 1: st1}
-                suff = {0: "", 1: ""}
+                g_up = g3
+                dy = dy_top
+                for layer in range(K - 1, -1, -1):
+                    sj = cache.get_or_compile(cfgs[layer], "backward",
+                                              pipeline=dc.pipeline_spec())
+                    stj = ex.ExecutorState(cfgs[layer])
+                    ex.load_backward_state_plan(cfgs[layer], stj,
+                                                fwds[layer], ws[layer][0],
+                                                ws[layer][1], dy)
+                    ex.execute(sj, stj, rng=np.random.default_rng(0))
+                    dx_tok, dtps[layer] = _token_grads(
+                        bs[layer], _ret_bufs(stj, "dx_ret", bs[layer].plan),
+                        fwds[layer]["y_ret"], g_up, tp3s[layer])
+                    g_up = dx_tok
+                    dws[layer] = _dw_of(stj, "", bs[layer].plan)
+                    if layer > 0:
+                        dy = _dy_of(bs[layer - 1].plan,
+                                    bs[layer - 1].send_row,
+                                    tp3s[layer - 1], dx_tok)
 
-            def _dw(layer, plan):
-                st_l = sts[layer]
-                s = suff[layer]
-                dw1 = np.stack([st_l.get(f"dW1{s}", r) if plan.recv_rows(r)
-                                else np.zeros((e_loc, d, 2 * f), np.float32)
-                                for r in range(dc.ep)])
-                dw2 = np.stack([st_l.get(f"dW2{s}", r) if plan.recv_rows(r)
-                                else np.zeros((e_loc, f, d), np.float32)
-                                for r in range(dc.ep)])
-                return (dw1.reshape(mc.e_total, d, 2 * f),
-                        dw2.reshape(mc.e_total, f, d))
-
-            dw1_0, dw2_0 = _dw(0, b0.plan)
-            dw1_1, dw2_1 = _dw(1, b1.plan)
-            return (dx0_tok.reshape(T, d), dtp0.reshape(T, k),
-                    dtp1.reshape(T, k), dw1_0, dw2_0, dw1_1, dw2_1)
+            return (g_up.reshape(T, d),
+                    tuple(dt.reshape(T, k) for dt in dtps),
+                    tuple(dw1 for dw1, _ in dws),
+                    tuple(dw2 for _, dw2 in dws))
 
         # ---- custom-vjp fused fragment ------------------------------------
         @jax.custom_vjp
-        def fragment(xt, tp0, ti0, tp1, ti1, w_in0, w_down0, w_in1, w_down1):
+        def fragment(xt, tps, tis, w_ins, w_downs):
             return jax.pure_callback(
                 fwd_host, jax.ShapeDtypeStruct((T, d), jnp.float32),
-                xt, tp0, ti0, tp1, ti1, w_in0, w_down0, w_in1, w_down1)
+                xt, tps, tis, w_ins, w_downs)
 
-        def fragment_fwd(xt, tp0, ti0, tp1, ti1,
-                         w_in0, w_down0, w_in1, w_down1):
-            y = fragment(xt, tp0, ti0, tp1, ti1,
-                         w_in0, w_down0, w_in1, w_down1)
-            return y, (xt, tp0, ti0, tp1, ti1,
-                       w_in0, w_down0, w_in1, w_down1)
+        def fragment_fwd(xt, tps, tis, w_ins, w_downs):
+            y = fragment(xt, tps, tis, w_ins, w_downs)
+            return y, (xt, tps, tis, w_ins, w_downs)
 
         def fragment_bwd(res, g):
-            xt, tp0, ti0, tp1, ti1, w_in0, w_down0, w_in1, w_down1 = res
-            out = jax.pure_callback(
+            xt, tps, tis, w_ins, w_downs = res
+            dxt, dtps, dw1s, dw2s = jax.pure_callback(
                 bwd_host,
                 (jax.ShapeDtypeStruct((T, d), jnp.float32),
-                 jax.ShapeDtypeStruct((T, k), jnp.float32),
-                 jax.ShapeDtypeStruct((T, k), jnp.float32),
-                 jax.ShapeDtypeStruct(w_in0.shape, jnp.float32),
-                 jax.ShapeDtypeStruct(w_down0.shape, jnp.float32),
-                 jax.ShapeDtypeStruct(w_in1.shape, jnp.float32),
-                 jax.ShapeDtypeStruct(w_down1.shape, jnp.float32)),
-                xt, tp0, ti0, tp1, ti1, w_in0, w_down0, w_in1, w_down1, g)
-            dxt, dtp0, dtp1, dw1_0, dw2_0, dw1_1, dw2_1 = out
+                 tuple(jax.ShapeDtypeStruct((T, k), jnp.float32)
+                       for _ in range(K)),
+                 tuple(jax.ShapeDtypeStruct(w.shape, jnp.float32)
+                       for w in w_ins),
+                 tuple(jax.ShapeDtypeStruct(w.shape, jnp.float32)
+                       for w in w_downs)),
+                xt, tps, tis, w_ins, w_downs, g)
             f0 = lambda t: np.zeros(t.shape, dtype=jax.dtypes.float0)
-            return (dxt.astype(xt.dtype), dtp0.astype(tp0.dtype), f0(ti0),
-                    dtp1.astype(tp1.dtype), f0(ti1),
-                    dw1_0.astype(w_in0.dtype), dw2_0.astype(w_down0.dtype),
-                    dw1_1.astype(w_in1.dtype), dw2_1.astype(w_down1.dtype))
+            return (dxt.astype(xt.dtype),
+                    tuple(dt.astype(tp.dtype)
+                          for dt, tp in zip(dtps, tps)),
+                    tuple(f0(ti) for ti in tis),
+                    tuple(dw.astype(w.dtype)
+                          for dw, w in zip(dw1s, w_ins)),
+                    tuple(dw.astype(w.dtype)
+                          for dw, w in zip(dw2s, w_downs)))
 
         fragment.defvjp(fragment_fwd, fragment_bwd)
 
-        y = fragment(xt, tp0, ti0, tp1, ti1,
-                     p_lo["w_in"], p_lo["w_down"],
-                     p_hi["w_in"], p_hi["w_down"])
+        y = fragment(xt, tuple(tps), tuple(tis),
+                     tuple(p["w_in"] for p in params),
+                     tuple(p["w_down"] for p in params))
         return y.astype(x.dtype).reshape(B, S, d)
 
     return block_impl

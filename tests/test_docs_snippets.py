@@ -1,0 +1,59 @@
+"""README quickstart snippets execute verbatim.
+
+Every fenced ```python block in README.md that opens with the
+`# PYTHONPATH=src python - <<'EOF'` header is a runnable quickstart; this
+test extracts each one and runs it exactly as its header says — a fresh
+``python`` process with ``PYTHONPATH=src`` (snippets touch the
+process-level SSC cache, so in-process ``exec`` would leak state into
+other tests). The snippets carry their own asserts — e.g. the PP
+quickstart asserts fused beats the stage-barrier reference and that
+``select_pp`` never predicts fused worse. A drifting API breaks the docs
+*and* the build, not just the docs.
+"""
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+README = REPO / "README.md"
+HEADER = "# PYTHONPATH=src python - <<'EOF'"
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _snippets():
+    blocks = FENCE_RE.findall(README.read_text())
+    out = []
+    for b in blocks:
+        if b.startswith(HEADER):
+            body = b[len(HEADER):].strip("\n")
+            body = body.removesuffix("EOF").rstrip("\n")
+            name = "anon"
+            m = re.search(r"^(?:from|import)\s+([\w.]+)", body, re.M)
+            if m:
+                name = m.group(1).split(".")[-1]
+            out.append(pytest.param(body, id=name))
+    return out
+
+
+SNIPPETS = _snippets()
+
+
+def test_readme_has_runnable_snippets():
+    assert len(SNIPPETS) >= 3          # fused block, PP quickstart, topology
+    joined = "\n".join(p.values[0] for p in SNIPPETS)
+    assert "compile_pp_fused" in joined    # the PP quickstart is present
+
+
+@pytest.mark.parametrize("body", SNIPPETS)
+def test_readme_snippet_executes_verbatim(body):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run([sys.executable, "-"], input=body, text=True,
+                          capture_output=True, cwd=str(REPO), env=env,
+                          timeout=300)
+    assert proc.returncode == 0, (
+        f"README snippet failed:\n{proc.stdout}\n{proc.stderr}")

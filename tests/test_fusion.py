@@ -267,3 +267,69 @@ def test_fused_dropless_block_matches_sequential_twin():
     # the fused handle compiled multi-fragment blobs, the twin per-layer ones
     assert all(e["fragments"] == 2 for e in fused.cache.info()["per_entry"])
     assert all(e["fragments"] == 1 for e in seq.cache.info()["per_entry"])
+
+
+def test_fused_dropless_block_k3_matches_sequential_twin():
+    """K=3 fused dropless block == three sequential per-layer steps, bit
+    for bit, forward and backward (jax.grad through the custom vjp)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.dropless import DroplessConfig, FusedDroplessMoE
+    from repro.models.moe import MoEConfig, init_moe
+
+    mc = MoEConfig(n_experts=6, top_k=2, d_expert=8, capacity_factor=8.0)
+    d = 16
+    ps = [init_moe(jax.random.PRNGKey(s), d, mc) for s in (0, 7, 11)]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d), jnp.float32)
+
+    dc = DroplessConfig(ep=3, bucket_rows=4)
+    fused = FusedDroplessMoE(dc, cache=SSCCache(max_entries=8), fuse=True)
+    seq = FusedDroplessMoE(dc, cache=SSCCache(max_entries=8), fuse=False)
+
+    yf = fused.impl(ps, x, mc)
+    ys = seq.impl(ps, x, mc)
+    assert np.isfinite(np.asarray(yf)).all() and np.asarray(yf).any()
+    np.testing.assert_array_equal(np.asarray(yf), np.asarray(ys))
+
+    gf = jax.grad(lambda q: jnp.sum(fused.impl(q, x, mc) ** 2))(tuple(ps))
+    gs = jax.grad(lambda q: jnp.sum(seq.impl(q, x, mc) ** 2))(tuple(ps))
+    for a, b in zip(jax.tree.leaves(gf), jax.tree.leaves(gs)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # fused blobs hold three fragments, sequential twins one each
+    assert all(e["fragments"] == 3 for e in fused.cache.info()["per_entry"])
+    assert all(e["fragments"] == 1 for e in seq.cache.info()["per_entry"])
+
+
+def test_fused_dropless_auto_matches_forced_choice():
+    """fuse="auto" routes through select_fused and stays bit-identical to
+    whichever forced path the selector predicts cheaper."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.dropless import DroplessConfig, FusedDroplessMoE
+    from repro.models.moe import MoEConfig, init_moe
+
+    mc = MoEConfig(n_experts=6, top_k=2, d_expert=8, capacity_factor=8.0)
+    d = 16
+    p0 = init_moe(jax.random.PRNGKey(0), d, mc)
+    p1 = init_moe(jax.random.PRNGKey(7), d, mc)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d), jnp.float32)
+
+    dc = DroplessConfig(ep=3, bucket_rows=4)
+    auto = FusedDroplessMoE(dc, cache=SSCCache(max_entries=8), fuse="auto")
+    fused = FusedDroplessMoE(dc, cache=SSCCache(max_entries=8), fuse=True)
+    seq = FusedDroplessMoE(dc, cache=SSCCache(max_entries=8), fuse=False)
+
+    ya = np.asarray(auto.impl([p0, p1], x, mc))
+    yf = np.asarray(fused.impl([p0, p1], x, mc))
+    ys = np.asarray(seq.impl([p0, p1], x, mc))
+    np.testing.assert_array_equal(yf, ys)     # twins agree regardless
+    np.testing.assert_array_equal(ya, yf)     # auto == both, trivially
+
+    ga = jax.grad(lambda q: jnp.sum(auto.impl(q, x, mc) ** 2))((p0, p1))
+    gf = jax.grad(lambda q: jnp.sum(fused.impl(q, x, mc) ** 2))((p0, p1))
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gf)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    with pytest.raises(ValueError, match="auto"):
+        FusedDroplessMoE(dc, fuse="sometimes")

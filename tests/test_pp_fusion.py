@@ -1,0 +1,295 @@
+"""Pipeline-parallel schedule fusion: StageBoundary legality, 1F1B
+interleave, stage-barrier reference, pricing, caching, selection.
+
+The PP-fusion contract (``core/fusion.py``): a pipeline stage is a
+fragment whose boundary carries *activations*. ``compile_pp_fused`` must
+
+1. stay acyclic and deadlock-free for any tuple of real per-stage plans,
+   any stage count and any microbatch count — proved by
+   ``validate_schedule`` plus an event-driven simulation per example, in
+   both plain and ``stage_barrier`` (fair per-stage reference) modes;
+2. execute bit-identically to per-stage sequential execution with the
+   stage handoff applied on the host between cells, fwd and bwd;
+3. price StageBoundary tiles on the stage link class (``inter`` under a
+   topology), expose ``pp_bubble_us``, and key SSC blobs on
+   (stages, microbatches, boundary kind) so shapes never alias;
+4. feed ``select_pp``, whose fused estimate is never worse than the
+   per-stage reference by construction.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import fusion as fu
+from repro.core import executor as ex
+from repro.core.autoselect import select_fused, select_pp
+from repro.core.costmodel import CostModel
+from repro.core.hardware import Topology
+from repro.core.odg import ScheduleConfig
+from repro.core.routing import hotspot_plan, random_plan, skewed_plan
+from repro.core.scheduler import validate_schedule
+from repro.core.simulator import simulate_unified
+from repro.core.ssc import SSCCache, schedule_to_ssc
+
+from tests._proptest import given, settings, st
+
+EP = 3
+D = 8
+
+
+def _cfg(plan, topology=None):
+    return ScheduleConfig(ep=plan.ep, e_loc=plan.e_loc, rows=0,
+                          d_model=D, d_ff=4, plan=plan, topology=topology)
+
+
+def _plan_of(kind, seed):
+    rng = np.random.default_rng(seed)
+    if kind == "skewed":
+        return skewed_plan(EP, 2, 6, 1.0 + (seed % 3) * 0.5)
+    if kind == "sparse":
+        return random_plan(EP, 2, 7, rng, p_zero=0.5)
+    return hotspot_plan(EP, 2, 4, background=seed % 3)
+
+
+KINDS = ("skewed", "sparse", "hotspot")
+
+
+def _stage_matrices(plans, rng):
+    """One remap matrix per junction (between stage s and s+1) per rank:
+    rows of stage s+1's send layout from rows of stage s's."""
+    return [{r: rng.standard_normal(
+                (plans[s + 1].send_rows(r), plans[s].send_rows(r)))
+                .astype(np.float32)
+             for r in range(EP)}
+            for s in range(len(plans) - 1)]
+
+
+def _pp_boundary_fns(fs, mats, transpose=False):
+    """boundary_fns for a PP-fused schedule: physical junction
+    ``m*(S-1) + s`` sits between stages s and s+1 of microbatch m, for
+    forward and backward alike (``transpose`` flips the remap for bwd)."""
+    pp = fs.opts["pp"]
+    S, M = pp["n_stages"], pp["n_microbatches"]
+    fns = {}
+    for m in range(M):
+        for s in range(S - 1):
+            j = m * (S - 1) + s
+            for r in range(EP):
+                A = mats[s][r].T if transpose else mats[s][r]
+
+                def fn(data, lo, hi, A=A):
+                    if data is None:
+                        data = np.zeros((A.shape[1], D), np.float32)
+                    return (A @ data)[lo:hi]
+                fns[(j, r)] = fn
+    return fns
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.sampled_from(KINDS), min_size=2, max_size=3),
+       st.integers(min_value=1, max_value=3),
+       st.integers(min_value=0, max_value=10_000))
+def test_pp_fused_acyclic_deadlock_free_bit_identical(kinds, M, seed):
+    S = len(kinds)
+    plans = [_plan_of(k, seed + i) for i, k in enumerate(kinds)]
+    cfgs = [_cfg(p) for p in plans]
+    rng = np.random.default_rng(seed)
+    mats = _stage_matrices(plans, rng)
+
+    # ---- forward: legality + simulation + bit-exact execution ----------
+    fs = fu.compile_pp_fused(cfgs, M, direction="forward",
+                             pipeline=("ratr",))
+    validate_schedule(fs)               # acyclic, single-trigger, complete
+    assert fs.opts["pp"] == {"n_stages": S, "n_microbatches": M,
+                             "order": [[s, m] for (s, m)
+                                       in fu.pp_cell_order(S, M, "forward")]}
+    res = simulate_unified(fs)          # deadlock-free: every task retires
+    resb = simulate_unified(fs, stage_barrier=True)
+    assert res.makespan_us > 0 and resb.makespan_us > 0
+    assert set(res.stage_span_us) == {(s, m) for s in range(S)
+                                      for m in range(M)}
+    with pytest.raises(ValueError):
+        simulate_unified(fs, stage_barrier=True, fragment_barrier=True)
+
+    ws = [ex.make_inputs_plan(c, (seed + 13 * i) % 97)
+          for i, c in enumerate(cfgs)]
+    x_srcs = [[rng.standard_normal((plans[0].send_rows(r), D))
+               .astype(np.float32) for r in range(EP)] for _ in range(M)]
+    refs = []                            # refs[m][s]
+    for m in range(M):
+        cur, per_m = x_srcs[m], []
+        for s in range(S):
+            per_m.append(ex.reference_forward_plan(cfgs[s], cur,
+                                                   ws[s][1], ws[s][2]))
+            if s < S - 1:
+                cur = [mats[s][r] @ per_m[s]["y_ret"][r] for r in range(EP)]
+        refs.append(per_m)
+
+    stf = ex.ExecutorState(cfgs[0],
+                           fragment_cfgs=fu.pp_fragment_cfgs(fs, cfgs))
+    fu.load_pp_forward_state(fs, cfgs, stf, x_srcs,
+                             [w[1] for w in ws], [w[2] for w in ws])
+    stf.boundary_fns = _pp_boundary_fns(fs, mats)
+    ex.execute(fs, stf, rng=np.random.default_rng(seed))
+    for m in range(M):
+        for s in range(S):
+            for r in range(EP):
+                if plans[s].send_rows(r):
+                    np.testing.assert_array_equal(
+                        stf.get(f"y_ret#S{s}M{m}", r), refs[m][s]["y_ret"][r])
+
+    # ---- backward: reversed wave order, transposed stage handoff -------
+    fb = fu.compile_pp_fused(cfgs, M, direction="backward",
+                             pipeline=("ratr", "gmm_interleave"))
+    validate_schedule(fb)
+    simulate_unified(fb)
+    simulate_unified(fb, stage_barrier=True)
+    assert fb.opts["pp"]["order"][0] == [S - 1, 0]     # top stage first
+
+    dys = [[rng.standard_normal(refs[m][S - 1]["y_ret"][r].shape)
+            .astype(np.float32) for r in range(EP)] for m in range(M)]
+    brefs = []                           # brefs[m][s] = (dx, dw1, dw2)
+    for m in range(M):
+        per_m = [None] * S
+        dy = dys[m]
+        for s in range(S - 1, -1, -1):
+            per_m[s] = ex.reference_backward_plan(cfgs[s], refs[m][s],
+                                                  ws[s][1], ws[s][2], dy)
+            if s > 0:
+                dy = [mats[s - 1][r].T @ per_m[s][0][r] for r in range(EP)]
+        brefs.append(per_m)
+
+    stb = ex.ExecutorState(cfgs[-1],
+                           fragment_cfgs=fu.pp_fragment_cfgs(fb, cfgs))
+    fu.load_pp_backward_state(fb, cfgs, stb, dys, refs,
+                              [w[1] for w in ws], [w[2] for w in ws])
+    stb.boundary_fns = _pp_boundary_fns(fb, mats, transpose=True)
+    ex.execute(fb, stb, rng=np.random.default_rng(seed + 1))
+    for m in range(M):
+        for s in range(S):
+            dx, dw1, dw2 = brefs[m][s]
+            lab = f"S{s}M{m}"
+            for r in range(EP):
+                if plans[s].send_rows(r):
+                    np.testing.assert_array_equal(
+                        stb.get(f"dx_ret#{lab}", r), dx[r])
+                if plans[s].recv_rows(r):
+                    np.testing.assert_array_equal(
+                        stb.get(f"dW1#{lab}", r), dw1[r])
+                    np.testing.assert_array_equal(
+                        stb.get(f"dW2#{lab}", r), dw2[r])
+
+
+def test_stage_boundary_tasks_carry_activation_payload():
+    """StageBoundary tiles are per-rank p2p with non-zero comm_bytes,
+    stamped with cell metadata and priced on the stage link class."""
+    topo = Topology(ranks_per_node=3)
+    plans = [skewed_plan(EP, 2, 6, 1.5), hotspot_plan(EP, 2, 4)]
+    cfgs = [_cfg(p, topology=topo) for p in plans]
+    fs = fu.compile_pp_fused(cfgs, 2, direction="forward")
+    cost = CostModel(topology=topo)
+    bnd = [fs.tasks[t] for f in fs.fragments for t in f.boundary_tids]
+    assert bnd
+    for td in bnd:
+        assert td.task_type == "StageBoundary"
+        assert td.meta["comm_kind"] == "stage"
+        assert {"pp_stage", "pp_microbatch", "boundary"} <= set(td.meta)
+        assert td.comm_bytes > 0
+        assert td.src_rank == td.dst_rank == td.rank
+        assert cost.link_class_of(td) == "inter"
+        assert cost.task_us(td) > 0
+    # boundary rows cover each downstream cell's send layout exactly
+    per_cell = {}
+    for td in bnd:
+        key = (td.meta["pp_stage"], td.meta["pp_microbatch"], td.rank)
+        per_cell.setdefault(key, []).append(
+            (td.outputs[0].lo, td.outputs[0].hi))
+    for (s, _, r), spans in per_cell.items():
+        spans.sort()
+        assert spans[0][0] == 0 and spans[-1][1] == plans[s].send_rows(r)
+        for (_, b), (c, _) in zip(spans, spans[1:]):
+            assert b == c
+    # without a topology the flat stage link prices the payload instead
+    flat = CostModel()
+    assert all(flat.link_class_of(td) == "link" for td in bnd)
+    assert all(flat.task_us(td) > 0 for td in bnd)
+    # the cost model sees a non-trivial pipeline ramp for S >= 2
+    assert cost.pp_bubble_us(fs) > 0
+    single = fu.compile_pp_fused([cfgs[0]], 2, n_stages=1)
+    assert cost.pp_bubble_us(single) == 0.0
+
+
+def test_pp_cell_order_is_1f1b_wave_order():
+    assert fu.pp_cell_order(2, 3, "forward") == [
+        (0, 0), (0, 1), (1, 0), (0, 2), (1, 1), (1, 2)]
+    assert fu.pp_cell_order(2, 3, "backward") == [
+        (1, 0), (1, 1), (0, 0), (1, 2), (0, 1), (0, 2)]
+    for direction in ("forward", "backward"):
+        order = fu.pp_cell_order(3, 4, direction)
+        assert sorted(order) == [(s, m) for s in range(3) for m in range(4)]
+        # microbatches of one stage stay in order
+        for s in range(3):
+            ms = [m for (s_, m) in order if s_ == s]
+            assert ms == sorted(ms)
+
+
+def test_pp_ssc_keys_separate_shapes_and_kinds():
+    """Same stage plans at different (stages, microbatches) — or vs layer
+    fusion — never alias in the SSC cache."""
+    plan = skewed_plan(EP, 2, 6, 1.5)
+    cfg = _cfg(plan)
+    cache = SSCCache(max_entries=16)
+    a = cache.get_or_compile_pp_fused([cfg, cfg], 1, "forward")
+    b = cache.get_or_compile_pp_fused([cfg, cfg], 2, "forward")
+    c = cache.get_or_compile_pp_fused([cfg, cfg, cfg], 1, "forward")
+    d = cache.get_or_compile_fused([cfg, cfg], "forward")
+    assert cache.misses == 4 and cache.hits == 0
+    assert len({len(s.tasks) for s in (a, b, c)}) == 3
+    # layer fusion bridges with LayerBoundary, PP fusion with StageBoundary
+    assert any(t.task_type == "StageBoundary" for t in a.tasks)
+    assert not any(t.task_type == "LayerBoundary" for t in a.tasks)
+    assert any(t.task_type == "LayerBoundary" for t in d.tasks)
+    # hits round-trip byte-identically
+    a2 = cache.get_or_compile_pp_fused([cfg, cfg], 1, "forward")
+    assert cache.hits == 1
+    assert schedule_to_ssc(a2) == schedule_to_ssc(a)
+    # and the blob equals a fresh compile (deterministic end to end)
+    fresh = fu.compile_pp_fused([cfg, cfg], 1, direction="forward")
+    assert schedule_to_ssc(fresh) == schedule_to_ssc(a)
+
+
+def test_select_pp_never_predicts_fused_worse():
+    for kinds in (("skewed", "skewed"), ("skewed", "hotspot"),
+                  ("hotspot", "sparse", "skewed")):
+        plans = [_plan_of(k, 5 + i) for i, k in enumerate(kinds)]
+        cfgs = [_cfg(p) for p in plans]
+        for M in (1, 2, 4):
+            for direction in ("forward", "backward"):
+                ch = select_pp(cfgs, M, direction=direction)
+                assert ch.n_stages == len(cfgs)
+                assert ch.n_microbatches == M
+                assert (ch.predicted_fused_us
+                        <= ch.predicted_per_stage_us + 1e-9)
+                assert ch.fuse
+                assert ch.bubble_us >= 0
+                assert len(ch.choices) == len(cfgs)
+    with pytest.raises(ValueError):
+        select_pp(cfgs, 0)
+    with pytest.raises(ValueError):
+        select_pp(cfgs, 2, direction="sideways")
+
+
+def test_select_fused_prices_host_bridge_alternative():
+    plans = [_plan_of("skewed", 3), _plan_of("hotspot", 4)]
+    cfgs = [_cfg(p) for p in plans]
+    for direction in ("forward", "backward"):
+        ch = select_fused(cfgs, direction=direction)
+        assert ch.fuse == (ch.predicted_fused_us
+                           <= ch.predicted_per_layer_us)
+        assert ch.predicted_fused_us > 0
+        assert ch.predicted_per_layer_us > 0
+        assert len(ch.choices) == 2
+    # at these sizes the host round-trip constant dominates the remap
+    assert select_fused(cfgs).fuse
+    with pytest.raises(ValueError):
+        select_fused(cfgs, direction="sideways")

@@ -1,0 +1,89 @@
+"""tools/selector_error.py: JSONL aggregation, metrics, and CI gates.
+
+The tool consumes ``schedsweep --selector-report --report-out`` rows and
+reports ordering metrics (argmin match, regret, pairwise accuracy). A tiny
+synthetic report with known ordering pins the arithmetic; an end-to-end
+case runs a real (small) selector report through the aggregator.
+"""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+_TOOL = Path(__file__).resolve().parents[1] / "tools" / "selector_error.py"
+_spec = importlib.util.spec_from_file_location("selector_error", _TOOL)
+selector_error = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(selector_error)
+
+
+def _row(plan, cand, pred, sim, picked, sim_best, regret=None):
+    return {"plan": plan, "direction": "forward", "candidate": cand,
+            "predicted_us": pred, "simulated_us": sim, "picked": picked,
+            "sim_best": sim_best, "regret": regret,
+            "ep": 4, "e_loc": 8, "rows": 32, "d_model": 64, "d_ff": 32,
+            "gmm_m_split": 8}
+
+
+def _write(tmp_path, rows, name="r.jsonl"):
+    p = tmp_path / name
+    p.write_text("".join(json.dumps(r) + "\n" for r in rows))
+    return str(p)
+
+
+def test_aggregate_known_ordering(tmp_path):
+    rows = [
+        # scenario A: pick == sim_best, predictions order correctly
+        _row("a", "x", 10.0, 12.0, True, True, 0.0),
+        _row("a", "y", 20.0, 24.0, False, False),
+        # scenario B: pick != sim_best (5% regret), one inverted pair
+        _row("b", "x", 10.0, 21.0, True, False, 0.05),
+        _row("b", "y", 20.0, 20.0, False, True),
+    ]
+    m = selector_error.aggregate(selector_error.load_rows(
+        [_write(tmp_path, rows)]))
+    assert m["rows"] == 4 and m["scenarios"] == 2
+    assert m["argmin_match_rate"] == pytest.approx(0.5)
+    assert m["mean_regret"] == pytest.approx(0.025)
+    assert m["max_regret"] == pytest.approx(0.05)
+    assert m["pairwise_ordering_accuracy"] == pytest.approx(0.5)
+    assert m["underprediction_ratio_median"] == pytest.approx(1.2)
+
+
+def test_main_gates_and_json(tmp_path, capsys):
+    rows = [_row("a", "x", 10.0, 12.0, True, True, 0.0),
+            _row("a", "y", 20.0, 24.0, False, False)]
+    path = _write(tmp_path, rows)
+    out = str(tmp_path / "m.json")
+    assert selector_error.main([path, "--json", out,
+                                "--min-argmin-rate", "0.5",
+                                "--max-mean-regret", "0.1"]) == 0
+    assert json.loads(Path(out).read_text())["argmin_match_rate"] == 1.0
+    # failing gate returns non-zero and names the metric
+    assert selector_error.main([path, "--min-argmin-rate", "1.5"]) == 1
+    assert "argmin_match_rate" in capsys.readouterr().err
+
+
+def test_bad_inputs(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        selector_error.load_rows([str(tmp_path / "missing.jsonl")])
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text("{not json\n")
+    with pytest.raises(ValueError, match="bad JSONL"):
+        selector_error.load_rows([str(bad)])
+
+
+def test_end_to_end_with_real_report(tmp_path):
+    from repro.launch.schedsweep import selector_report
+
+    out = str(tmp_path / "report.jsonl")
+    rows = selector_report(ep=2, e_loc=4, rows=16, d_model=64, d_ff=32,
+                           report_out=out, quiet=True)
+    assert rows
+    m = selector_error.aggregate(selector_error.load_rows([out]))
+    assert m["rows"] == len(rows)
+    assert m["scenarios"] > 0
+    assert 0.0 <= m["argmin_match_rate"] <= 1.0
+    assert m["mean_regret"] is not None and m["mean_regret"] >= 0.0
